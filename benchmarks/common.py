@@ -1,0 +1,24 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (us) of a jitted call with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")

@@ -1,0 +1,47 @@
+"""Paper Table 4 + Appendix B: optimizer memory for LLaMA 1B/7B, ours vs the
+paper's published numbers, plus the assigned-architecture zoo."""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, LLAMA_PAPER, get_arch
+from repro.core import memory_report
+from repro.models import param_shapes
+
+PAPER = {  # (model, method) -> GB from Appendix B
+    ("llama-7b", "sgd"): 13.476, ("llama-7b", "adam"): 40.428,
+    ("llama-7b", "muon"): 26.952, ("llama-7b", "swan"): 14.524,
+    ("llama-7b", "apollo"): 16.144, ("llama-7b", "apollo_mini"): 14.531,
+    ("llama-7b", "scale"): 13.738,
+    ("llama-1b", "sgd"): 2.678, ("llama-1b", "adam"): 8.034,
+    ("llama-1b", "muon"): 5.356, ("llama-1b", "swan"): 3.202,
+    ("llama-1b", "apollo_mini"): 3.20, ("llama-1b", "scale"): 2.809,
+}
+
+METHODS = ("sgd", "adam", "muon", "swan", "galore", "fira", "apollo",
+           "apollo_mini", "scale")
+
+
+def run(quick: bool = True):
+    rows = []
+    for model in ("llama-1b", "llama-7b"):
+        shapes = param_shapes(get_arch(model))
+        for m in METHODS:
+            ours = memory_report(shapes, m).gb()[2]
+            ref = PAPER.get((model, m))
+            derived = (f"ours={ours:.3f}G paper={ref:.3f}G "
+                       f"diff={100*(ours-ref)/ref:+.1f}%" if ref
+                       else f"ours={ours:.3f}G")
+            rows.append((f"table4/{model}/{m}", None, derived))
+    if not quick:
+        for arch in ARCH_IDS:
+            shapes = param_shapes(get_arch(arch))
+            adam = memory_report(shapes, "adam").gb()[2]
+            scale = memory_report(shapes, "scale").gb()[2]
+            rows.append((f"memory_zoo/{arch}", None,
+                         f"scale={scale:.1f}G adam={adam:.1f}G "
+                         f"ratio={scale/adam:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

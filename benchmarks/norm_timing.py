@@ -1,0 +1,41 @@
+"""Paper Table 1: wall-time of each gradient normalization.
+
+The paper measures CUDA on an A40; here the same ordering must hold on CPU:
+sign < col/row << NS << exact SVD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (colnorm, ns_orthogonalize, rownorm, signnorm,
+                        svd_orthogonalize)
+
+from .common import time_call
+
+NORMS = [
+    ("singular-value", svd_orthogonalize),
+    ("singular-value-ns", ns_orthogonalize),
+    ("column-wise", colnorm),
+    ("row-wise", rownorm),
+    ("sign", signnorm),
+]
+
+
+def run(quick: bool = True):
+    dims = (256, 512) if quick else (256, 512, 1024, 2048)
+    rows = []
+    for d in dims:
+        g = jax.random.normal(jax.random.PRNGKey(0), (d, d))
+        for name, fn in NORMS:
+            if name == "singular-value" and d > 512 and quick:
+                continue
+            jfn = jax.jit(fn)
+            us = time_call(jfn, g, iters=3 if "singular" in name else 7)
+            rows.append((f"table1/{name}/d{d}", round(us, 1), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -1,0 +1,50 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline
+table (one row per arch x shape x mesh): three terms, bottleneck, useful-
+flop ratio, and what would move the dominant term."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+SUGGESTIONS = {
+    "compute_s": "raise arithmetic efficiency: larger microbatch per chip / "
+                 "reduce remat recompute",
+    "memory_s": "cut HBM traffic: fuse optimizer update, bf16 accumulators, "
+                "larger attention tiles",
+    "collective_s": "reshard: fewer TP all-reduces (2D->1D), overlap "
+                    "collectives with compute, FSDP gather instead of "
+                    "activation reduce",
+}
+
+
+def load(out_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = True, out_dir: str = "results/dryrun"):
+    rows = []
+    for r in load(out_dir):
+        roof = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        dominant = roof["bottleneck"]
+        derived = (f"compute={roof['compute_s']:.3e}s "
+                   f"memory={roof['memory_s']:.3e}s "
+                   f"collective={roof['collective_s']:.3e}s "
+                   f"bottleneck={dominant.replace('_s','')} "
+                   f"useful={roof['useful_flop_ratio']:.2f} "
+                   f"mfu_bound={roof['mfu_at_roofline']:.3f}")
+        rows.append((name, None, derived))
+    if not rows:
+        rows.append(("roofline/none", None,
+                     "run repro.launch.dryrun first (results/dryrun empty)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -1,0 +1,47 @@
+"""Paper Table 7 (Appendix D): optimizer-step throughput.
+
+Times one full optimizer update (given fixed gradients) for each method on
+a llama-130m-shaped parameter set — isolating the optimizer cost exactly as
+the paper's tokens/sec comparison does (fwd/bwd is identical across
+methods). Expect: sign/col/row ~ Adam-class cheap; NS-based (Muon/SWAN)
+markedly slower; GaLore/Fira pay periodic SVDs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import make_optimizer
+from repro.models import init_params
+
+from .common import time_call
+
+METHODS = [("scale", {}), ("scale_fused", {}), ("adam", {}),
+           ("stable_spam", {}), ("muon", {}), ("swan", {}),
+           ("galore", {"rank": 64}), ("fira", {"rank": 64}),
+           ("apollo", {"rank": 64}), ("apollo_mini", {}), ("sgd", {})]
+
+
+def run(quick: bool = True):
+    arch = "llama-60m" if quick else "llama-130m"
+    cfg = get_arch(arch)
+    cfg.dtype = "float32"
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree_util.tree_map(
+        lambda p: 0.01 * jnp.ones_like(p), params)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    rows = []
+    for name, kw in METHODS:
+        tx = make_optimizer(name, 1e-3, **kw)
+        state = tx.init(params)
+        step = jax.jit(lambda g, s: tx.update(g, s, params))
+        us = time_call(step, grads, state, iters=5)
+        rows.append((f"table7/{arch}/{name}", round(us, 1),
+                     f"params={n/1e6:.0f}M"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

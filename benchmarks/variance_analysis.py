@@ -1,0 +1,85 @@
+"""Paper Fig. 4 + Fig. 10 proxies.
+
+Fig. 4: per-layer-group gradient variance (small-batch grads vs a large-
+batch estimate of the true gradient) — the LM head should dominate, and
+last-layer momentum should shrink it.
+
+Fig. 10: LM-head gradient column norms vs token frequency — frequent (low-
+id, Zipf) tokens get much larger column norms, the imbalance column-wise
+normalization fixes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_dataset
+from repro.models import init_params, loss_fn
+from .pretrain_proxy import proxy_cfg
+
+
+def _group_of(path: str) -> str:
+    if "lm_head" in path:
+        return "lm_head"
+    if "tok_embed" in path:
+        return "embedding"
+    return "hidden"
+
+
+def layer_variances(n_small: int = 8, small_batch: int = 4,
+                    large_batch: int = 64, seq: int = 64):
+    cfg = proxy_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = make_dataset(cfg, seq_len=seq, global_batch=large_batch)
+    grad_fn = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, b)[0]))
+
+    big = ds.global_batch_at(0)
+    g_true = grad_fn(params, big)
+
+    from repro.core.labels import path_str
+    sums, counts = {}, {}
+    for i in range(n_small):
+        sl = jax.tree_util.tree_map(
+            lambda x: x[i * small_batch:(i + 1) * small_batch], big)
+        g = grad_fn(params, sl)
+        for (kp, gl), tl in zip(jax.tree_util.tree_flatten_with_path(g)[0],
+                                jax.tree_util.tree_leaves(g_true)):
+            grp = _group_of(path_str(kp))
+            d = jnp.mean((gl.astype(jnp.float32) - tl.astype(jnp.float32)) ** 2)
+            sums[grp] = sums.get(grp, 0.0) + float(d)
+            counts[grp] = counts.get(grp, 0) + 1
+    return {k: sums[k] / counts[k] for k in sums}
+
+
+def head_column_norms(seq: int = 64, batch: int = 32):
+    cfg = proxy_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = make_dataset(cfg, seq_len=seq, global_batch=batch)
+    grad_fn = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, b)[0]))
+    g = grad_fn(params, ds.global_batch_at(0))
+    gh = np.asarray(g["lm_head"]["w"], np.float32)  # (D, V)
+    norms = np.linalg.norm(gh, axis=0)
+    # Zipf ids: low token-id == frequent
+    head = norms[:32].mean()
+    tail = norms[256:512].mean()
+    return head, tail
+
+
+def run(quick: bool = True):
+    rows = []
+    var = layer_variances(n_small=4 if quick else 8)
+    for grp, v in sorted(var.items()):
+        rows.append((f"fig4/variance/{grp}", None, f"var={v:.3e}"))
+    rows.append(("fig4/lm_head_dominates", None,
+                 f"{var['lm_head'] > var['hidden']}"))
+    head, tail = head_column_norms()
+    rows.append(("fig10/colnorm_frequent_tokens", None,
+                 f"head32={head:.2e} tail256={tail:.2e} "
+                 f"ratio={head/max(tail,1e-12):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -1,0 +1,45 @@
+"""Figure 1 in miniature: perplexity vs optimizer memory across methods.
+
+Trains the same proxy LLaMA with every optimizer and prints a Pareto table:
+SCALE should sit at the bottom-left (lowest memory at Adam-class ppl).
+
+  PYTHONPATH=src python examples/compare_optimizers.py --steps 150
+"""
+import argparse
+
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.pretrain_proxy import pretrain, proxy_cfg, _sched
+from repro.core import make_optimizer, memory_report
+from repro.models import param_shapes
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+args = ap.parse_args()
+
+METHODS = [("scale", {}, 1e-2), ("adam", {}, 3e-3), ("stable_spam", {}, 3e-3),
+           ("muon", {}, 3e-3), ("swan", {}, 3e-3),
+           ("galore", {"rank": 16}, 3e-3), ("fira", {"rank": 16}, 3e-3),
+           ("apollo", {"rank": 16}, 3e-3), ("apollo_mini", {}, 3e-3),
+           ("sgd", {}, 0.1)]
+
+shapes = param_shapes(proxy_cfg())
+rows = []
+for name, kw, lr in METHODS:
+    ppl = pretrain(make_optimizer(name, _sched(lr, args.steps), **kw),
+                   args.steps)
+    mem = memory_report(shapes, "adam" if name == "stable_spam" else
+                        name.replace("scale_fused", "scale"),
+                        rank=kw.get("rank", 256)).gb()[2] * 1e3
+    rows.append((name, ppl, mem))
+
+rows.sort(key=lambda r: r[2])
+print(f"{'method':14s} {'eval_ppl':>9s} {'mem_MB':>8s}")
+for name, ppl, mem in rows:
+    print(f"{name:14s} {ppl:9.2f} {mem:8.2f}")
+
+best_ppl = min(r[1] for r in rows)
+scale_row = next(r for r in rows if r[0] == "scale")
+print(f"\nSCALE: ppl within {scale_row[1]/best_ppl - 1:.1%} of best, "
+      f"memory rank #{[r[0] for r in rows].index('scale') + 1} "
+      f"(1 = smallest after SGD)")

@@ -1,0 +1,47 @@
+"""Fine-tuning proxy (paper Appendix I): take a pretrained checkpoint and
+fine-tune with SCALE vs Adam on a shifted data distribution.
+
+  PYTHONPATH=src python examples/finetune.py
+"""
+import dataclasses
+
+import jax
+
+from repro.core import linear_warmup_cosine, make_optimizer
+from repro.data import make_dataset
+from repro.models import init_params
+from repro.training import init_state, make_eval_step, make_train_step
+from repro.models import ModelConfig
+
+
+def proxy_cfg():
+    return ModelConfig(name="llama-proxy", family="dense", n_layers=4,
+                       d_model=128, n_heads=4, n_kv_heads=4, d_ff=344,
+                       vocab_size=512, dtype="float32", attn_kv_block=64,
+                       attn_q_block=64, loss_chunk=64)
+
+PRETRAIN_STEPS, FT_STEPS = 80, 40
+cfg = proxy_cfg()
+
+# --- pretrain once (seed-0 distribution) ---
+tx0 = make_optimizer("scale", linear_warmup_cosine(1e-2, PRETRAIN_STEPS))
+state = init_state(init_params(jax.random.PRNGKey(0), cfg), tx0)
+step0 = jax.jit(make_train_step(cfg, tx0, clip_norm=1.0))
+ds_pre = make_dataset(cfg, seq_len=64, global_batch=16, seed=0)
+for i in range(PRETRAIN_STEPS):
+    state, _ = step0(state, ds_pre.host_batch_at(i))
+pretrained = state.params
+ev = jax.jit(make_eval_step(cfg))
+
+# --- fine-tune on a different bigram map (seed-7 "domain") ---
+ds_ft = make_dataset(cfg, seq_len=64, global_batch=16, seed=7)
+base = float(ev(pretrained, ds_ft.host_batch_at(9_999))["perplexity"])
+print(f"zero-shot ppl on the new domain: {base:.2f}")
+for name, lr in (("scale", 3e-3), ("adam", 1e-3)):
+    tx = make_optimizer(name, linear_warmup_cosine(lr, FT_STEPS))
+    st = init_state(pretrained, tx)
+    stepf = jax.jit(make_train_step(cfg, tx, clip_norm=1.0))
+    for i in range(FT_STEPS):
+        st, _ = stepf(st, ds_ft.host_batch_at(i))
+    ppl = float(ev(st.params, ds_ft.host_batch_at(9_999))["perplexity"])
+    print(f"fine-tuned with {name:6s}: ppl {ppl:.2f}  (improvement {base/ppl:.2f}x)")

@@ -1,0 +1,4 @@
+from .checkpointer import (AsyncSave, latest_step, restore, restore_latest,
+                           save, save_async)
+__all__ = ["AsyncSave", "latest_step", "restore", "restore_latest", "save",
+           "save_async"]

@@ -1,0 +1,189 @@
+"""Fault-tolerant checkpointing: zstd-compressed msgpack shards with atomic
+renames, manifest checksums, latest-k retention, and auto-resume.
+
+Layout:  <dir>/step_<N>/shard_<host>.mpk.zst + manifest.json (+ COMMITTED
+marker written last — a crash mid-save never yields a readable-but-corrupt
+checkpoint, and restore_latest skips uncommitted steps).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict:
+    out = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        from repro.core.labels import path_str
+        out[path_str(kp)] = np.asarray(leaf)
+    return out
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+
+
+def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
+         n_hosts: int = 1, keep: int = 3) -> str:
+    """Atomically save ``tree`` for ``step``. Returns the checkpoint path."""
+    step_dir = os.path.join(directory, f"step_{step:010d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    flat = _flatten(tree)
+    payload = msgpack.packb({k: _pack_array(v) for k, v in flat.items()},
+                            use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    shard = os.path.join(tmp_dir, f"shard_{host_id:05d}.mpk.zst")
+    with open(shard + ".part", "wb") as f:
+        f.write(comp)
+    os.replace(shard + ".part", shard)
+
+    manifest = {
+        "step": step, "n_hosts": n_hosts,
+        "checksums": {os.path.basename(shard): zlib.crc32(comp)},
+        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)
+
+    _retain_latest(directory, keep)
+    return step_dir
+
+
+def _retain_latest(directory: str, keep: int) -> None:
+    steps = sorted(_list_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "COMMITTED")):
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree:
+    """Restore ``step`` into the structure/dtypes of ``like``."""
+    step_dir = os.path.join(directory, f"step_{step:010d}")
+    shard = os.path.join(step_dir, f"shard_{host_id:05d}.mpk.zst")
+    with open(shard, "rb") as f:
+        comp = f.read()
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    want = zlib.crc32(comp)
+    have = manifest["checksums"].get(os.path.basename(shard))
+    if have != want:
+        raise IOError(f"checksum mismatch in {shard}: {have} != {want}")
+    raw = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(comp),
+                          raw=False)
+    flat = {k: _unpack_array(v) for k, v in raw.items()}
+
+    from repro.core.labels import path_str
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for kp, leaf in leaves_with_path:
+        key = path_str(kp)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {np.shape(leaf)}")
+        restored.append(np.asarray(arr).astype(np.asarray(leaf).dtype
+                                                if hasattr(leaf, "dtype") else arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def restore_latest(directory: str, like: PyTree,
+                   host_id: int = 0) -> Optional[Tuple[PyTree, int]]:
+    """Auto-resume: (tree, step) of the newest committed checkpoint, or None."""
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return restore(directory, step, like, host_id), step
+
+
+class AsyncSave:
+    """Handle for an in-flight asynchronous checkpoint."""
+
+    def __init__(self, thread: threading.Thread):
+        self._thread = thread
+        self.path: Optional[str] = None
+        self.error: Optional[BaseException] = None
+
+    def wait(self, timeout: Optional[float] = None) -> str:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("checkpoint save still in flight")
+        if self.error is not None:
+            raise self.error
+        return self.path
+
+    @property
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+
+def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
+               n_hosts: int = 1, keep: int = 3) -> AsyncSave:
+    """Checkpoint without blocking the training loop.
+
+    Device arrays are snapshotted to host memory synchronously (cheap; the
+    training step can immediately donate/overwrite them), then serialization,
+    compression and the atomic commit run on a background thread — the
+    standard overlap-checkpoint-with-compute pattern.
+    """
+    snapshot = _flatten(tree)          # device->host copy happens here
+    treedef = jax.tree_util.tree_structure(tree)
+    del tree
+
+    handle: AsyncSave
+
+    def work():
+        try:
+            flat_tree = jax.tree_util.tree_unflatten(
+                treedef, list(snapshot.values()))
+            handle.path = save(directory, step, flat_tree,
+                               host_id=host_id, n_hosts=n_hosts, keep=keep)
+        except BaseException as e:  # surfaced on wait()
+            handle.error = e
+
+    t = threading.Thread(target=work, daemon=True)
+    handle = AsyncSave(t)
+    t.start()
+    return handle

@@ -1,0 +1,60 @@
+"""Shared config machinery: input-shape cells + per-cell config adaptation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    subquadratic_only: bool = False
+
+
+# The LM-family shape set assigned to every architecture in this task.
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", 4_096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    ShapeSpec("decode_32k", "decode", 32_768, 128),
+    ShapeSpec("long_500k", "decode", 524_288, 1, subquadratic_only=True),
+)
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Sub-quadratic prefill: SSM state or hybrid (per DESIGN.md §5)."""
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _carry_bytes(cfg: ModelConfig, shape, local_mb: int = 4) -> float:
+    """Scan-carry (saved residuals) estimate at local microbatch 4, bf16."""
+    n_superblocks = sum(n for _, n in cfg.segments)
+    return n_superblocks * local_mb * shape.seq_len * cfg.d_model * 2.0
+
+
+def cell_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Adapt a model config to one input-shape cell.
+
+    long_500k (batch=1) re-maps sharding: the batch axis cannot shard, so the
+    sequence/cache-seq axes take the ``data`` axis (sequence parallelism).
+    """
+    cfg = dataclasses.replace(cfg)
+    if shape.kind == "train" and _carry_bytes(cfg, shape) > 5e9:
+        # store the scan-carry residual TP-sharded (sequence-parallel style)
+        # ONLY where the saved activations wouldn't fit: the resharding costs
+        # one residual-sized all-gather fwd + all-reduce bwd per layer, which
+        # regressed the dense cells when applied blanket (§Perf iteration 8)
+        cfg.rule_overrides = tuple(cfg.rule_overrides) + (
+            ("act_residual", ("model",)),)
+    if shape.global_batch == 1:
+        cfg.rule_overrides = tuple(cfg.rule_overrides) + (
+            ("act_batch", ()),
+            ("cache_batch", ()),
+            ("act_seq", ("data",)),
+            ("cache_seq", ("data", "model")),
+        )
+    return cfg

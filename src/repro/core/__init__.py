@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: SCALE + baseline optimizers."""
+from .api import OPTIMIZER_NAMES, make_optimizer
+from .labels import LabelRules, label_tree, partition_sizes
+from .memory import MemoryReport, memory_report, optimizer_state_elements
+from .normalization import (colnorm, normalize, NORMALIZATIONS,
+                            ns_orthogonalize, rownorm, signnorm,
+                            svd_orthogonalize)
+from .optimizers import adam, muon, normalized_sgd, sgd, stable_spam_adam
+from .compression import (compress, compressed, compression_ratio,
+                          decompress)
+from .galore import apollo, apollo_mini, fira, galore
+from .scale import ScaleState, scale
+from .schedules import constant, linear_warmup_cosine
+from .swan import swan
+from .types import (GradientTransformation, apply_updates, chain,
+                    global_norm, identity)
+
+__all__ = [
+    "OPTIMIZER_NAMES", "make_optimizer", "LabelRules", "label_tree",
+    "partition_sizes", "MemoryReport", "memory_report",
+    "optimizer_state_elements", "colnorm", "normalize", "NORMALIZATIONS",
+    "ns_orthogonalize", "rownorm", "signnorm", "svd_orthogonalize",
+    "adam", "muon", "normalized_sgd", "sgd", "stable_spam_adam",
+    "apollo", "apollo_mini", "fira", "galore", "compress", "compressed",
+    "compression_ratio", "decompress", "ScaleState", "scale",
+    "constant", "linear_warmup_cosine", "swan", "GradientTransformation",
+    "apply_updates", "chain", "global_norm", "identity",
+]

@@ -1,0 +1,60 @@
+"""Public optimizer factory: ``make_optimizer(name, lr=..., **kw)``.
+
+Names match the paper's tables: scale, sgd, sgd_momentum, adam, adamw,
+stable_spam, muon, swan, galore, fira, apollo, apollo_mini, plus the Table-2
+normalization ablations sgd_colnorm / sgd_rownorm / sgd_signnorm / sgd_nsnorm.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from . import galore as _galore
+from . import optimizers as _opt
+from . import scale as _scale
+from . import swan as _swan
+from .types import GradientTransformation
+
+
+def make_optimizer(name: str, lr: Any = 1e-3, **kw) -> GradientTransformation:
+    name = name.lower()
+    if name == "scale":
+        return _scale.scale(lr, **kw)
+    if name == "scale_fused":
+        return _scale.scale(lr, impl="fused", **kw)
+    if name == "sgd":
+        return _opt.sgd(lr, **kw)
+    if name == "sgd_momentum":
+        kw.setdefault("momentum", 0.9)
+        return _opt.sgd(lr, **kw)
+    if name in ("adam",):
+        return _opt.adam(lr, **kw)
+    if name == "adamw":
+        kw.setdefault("weight_decay", 0.01)
+        return _opt.adam(lr, **kw)
+    if name == "stable_spam":
+        return _opt.stable_spam_adam(lr, **kw)
+    if name == "muon":
+        return _opt.muon(lr, **kw)
+    if name == "swan":
+        return _swan.swan(lr, **kw)
+    if name == "galore":
+        return _galore.galore(lr, **kw)
+    if name == "fira":
+        return _galore.fira(lr, **kw)
+    if name == "apollo":
+        return _galore.apollo(lr, **kw)
+    if name == "apollo_mini":
+        return _galore.apollo_mini(lr, **kw)
+    if name.startswith("sgd_") and name.endswith("norm"):
+        kind = {"sgd_colnorm": "col", "sgd_rownorm": "row",
+                "sgd_signnorm": "sign", "sgd_nsnorm": "ns",
+                "sgd_svdnorm": "svd"}[name]
+        return _opt.normalized_sgd(lr, kind=kind, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+OPTIMIZER_NAMES = (
+    "scale", "scale_fused", "sgd", "sgd_momentum", "adam", "adamw",
+    "stable_spam", "muon", "swan", "galore", "fira", "apollo", "apollo_mini",
+    "sgd_colnorm", "sgd_rownorm", "sgd_signnorm", "sgd_nsnorm",
+)

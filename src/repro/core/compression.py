@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod (DCN) gradient reduction.
+
+At multi-pod scale the pod-axis gradient all-reduce crosses data-center
+network, not ICI; compressing gradients to int8 before the cross-pod hop
+quarters that traffic.
+
+The paper-specific insight: **column-wise int8 quantization composes
+exactly with SCALE**. colnorm(g) is invariant to any positive per-column
+rescaling, so the per-column quantization scale — the lossy part of most
+compression schemes — cancels identically in SCALE's update; the only
+error is the 8-bit rounding *within* a column (bounded relative error
+1/254 per element). For Adam-family optimizers the scale does not cancel
+and compression bias accumulates in v_t. Property-tested in
+tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import GradientTransformation, PyTree
+
+_I8_MAX = 127.0
+
+
+class CompressedLeaf(NamedTuple):
+    q: jnp.ndarray       # int8 payload
+    scale: jnp.ndarray   # per-column f32 scale (1, ..., d_out)
+
+
+def compress_leaf(g: jnp.ndarray) -> CompressedLeaf:
+    """Column-wise symmetric int8 quantization (matrices; reduction axis -2)."""
+    gf = g.astype(jnp.float32)
+    if g.ndim >= 2:
+        amax = jnp.max(jnp.abs(gf), axis=-2, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(gf), keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / _I8_MAX
+    q = jnp.clip(jnp.round(gf / scale), -_I8_MAX, _I8_MAX).astype(jnp.int8)
+    return CompressedLeaf(q, scale)
+
+
+def decompress_leaf(c: CompressedLeaf, dtype) -> jnp.ndarray:
+    return (c.q.astype(jnp.float32) * c.scale).astype(dtype)
+
+
+def compress(grads: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(compress_leaf, grads)
+
+
+def decompress(comp: PyTree, like: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda c, g: decompress_leaf(c, g.dtype), comp, like,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf))
+
+
+def compressed(tx: GradientTransformation) -> GradientTransformation:
+    """Wrap an optimizer so it sees int8-roundtripped gradients — exactly
+    what arrives after a compressed cross-pod reduction."""
+
+    def init(params):
+        return tx.init(params)
+
+    def update(grads, state, params=None):
+        rt = decompress(compress(grads), grads)
+        return tx.update(rt, state, params)
+
+    return GradientTransformation(init, update)
+
+
+def compression_ratio(grads: PyTree) -> float:
+    """Wire-bytes ratio achieved by int8 + per-column f32 scales."""
+    orig = comp = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        cols = n // g.shape[-2] if g.ndim >= 2 else 1
+        orig += n * g.dtype.itemsize
+        comp += n * 1 + cols * 4
+    return orig / max(comp, 1)

@@ -1,0 +1,83 @@
+"""Parameter labeling: which update branch each parameter takes.
+
+Groups (paper Algorithm 1 + Appendix C):
+  * ``last``   — the LM head (logit-producing matrix); gets momentum + colnorm.
+  * ``first``  — the token embedding (used by ablations / SWAN / mmt-first+last).
+  * ``matrix`` — every other >=2-D weight; gets stateless normalization.
+  * ``vector`` — <=1-D params (norm scales, biases, A_log/D in Mamba); Adam.
+
+Classification is by tree path (joined with '/') against configurable
+substrings, with the dimensionality fallback. This matches how the paper's
+torch implementation special-cases ``lm_head`` and ``embed`` modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+LAST_LAYER_PATTERNS = (r"lm_head", r"output_head", r"codebook_head")
+FIRST_LAYER_PATTERNS = (r"tok_embed", r"embed_tokens", r"frame_embed", r"patch_embed")
+# Params that are per-layer scales/biases/SSM scalars even when stacked to
+# >=2-D by scan-over-layers. These take the Adam branch (paper Appendix C).
+VECTOR_PATTERNS = (r"norm", r"bias", r"/b[qkv]$", r"A_log", r"dt_bias",
+                   r"/D$", r"conv_b", r"conv_w", r"/s$", r"scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelRules:
+    last: tuple = LAST_LAYER_PATTERNS
+    first: tuple = FIRST_LAYER_PATTERNS
+    vector: tuple = VECTOR_PATTERNS
+
+    def classify(self, path: str, ndim: int) -> str:
+        if ndim <= 1:
+            return "vector"
+        for pat in self.vector:
+            if re.search(pat, path):
+                return "vector"
+        for pat in self.last:
+            if re.search(pat, path):
+                return "last"
+        for pat in self.first:
+            if re.search(pat, path):
+                return "first"
+        return "matrix"
+
+
+def path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def label_tree(params: PyTree, rules: LabelRules | None = None) -> PyTree:
+    """Return a pytree of str labels mirroring ``params``."""
+    rules = rules or LabelRules()
+
+    def f(kp, leaf):
+        return rules.classify(path_str(kp), jnp.ndim(leaf))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def partition_sizes(params: PyTree, rules: LabelRules | None = None) -> dict:
+    """Parameter counts per label group (for memory accounting & logging)."""
+    labels = label_tree(params, rules)
+    sizes: dict = {}
+    for lab, leaf in zip(
+        jax.tree_util.tree_leaves(labels), jax.tree_util.tree_leaves(params)
+    ):
+        sizes[lab] = sizes.get(lab, 0) + int(jnp.size(leaf))
+    return sizes

@@ -1,0 +1,133 @@
+"""Optimizer-state memory accounting (paper Appendix B / Table 4).
+
+Computes weights + optimizer-state bytes analytically from parameter shapes,
+following the paper's estimation protocol: bf16 (2 bytes) per float, counting
+embedding/attention/MLP/head matrices. Used by ``benchmarks/memory_table.py``
+and asserted against the paper's published numbers in ``tests/test_memory.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+from .labels import LabelRules, label_tree
+
+GB = 1024 ** 3
+GB_DEC = 1e9  # the paper's "G" is decimal (0.131B params * 2B = 0.262G)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryReport:
+    method: str
+    weight_bytes: int
+    state_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.weight_bytes + self.state_bytes
+
+    def gb(self, decimal: bool = True) -> tuple:
+        d = GB_DEC if decimal else GB
+        return (self.weight_bytes / d, self.state_bytes / d, self.total_bytes / d)
+
+
+def _is_shape(x) -> bool:
+    return isinstance(x, (tuple, list)) and all(isinstance(i, int) for i in x)
+
+
+def _shape_of(leaf) -> tuple:
+    if hasattr(leaf, "shape"):
+        return tuple(leaf.shape)
+    return tuple(leaf)
+
+
+def _size(shape) -> int:
+    return int(np.prod(shape)) if shape else 1
+
+
+def _proj_state_sizes(shape, rank: int, store_projector: bool) -> int:
+    """Low-rank (m, v) + optional projector element count for one matrix."""
+    m, n = shape[-2], shape[-1]
+    lead = _size(shape[:-2])
+    r = min(rank, m, n)
+    low = r * min(m, n)          # per-state low-rank elements
+    proj = min(m, n) * r if store_projector else 0
+    return lead * (2 * low + proj)
+
+
+def optimizer_state_elements(
+    shapes: Mapping | Any,
+    method: str,
+    rank: int = 256,
+    rules: LabelRules | None = None,
+) -> int:
+    """Number of extra optimizer-state elements for ``method``.
+
+    ``shapes`` is a pytree of arrays or shape-tuples.
+    """
+    rules = rules or LabelRules()
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=_is_shape)[0]
+
+    from .labels import path_str  # local import to avoid cycle
+
+    total = 0
+    for kp, leaf in leaves_with_path:
+        shape = _shape_of(leaf)
+        lab = rules.classify(path_str(kp), len(shape))
+        n = _size(shape)
+        if method == "sgd":
+            extra = 0
+        elif method in ("sgd_momentum",):
+            extra = n
+        elif method in ("adam", "adamw", "stable_spam"):
+            extra = 2 * n
+        elif method == "muon":
+            # first-order momentum everywhere (paper App. B counts 1x total)
+            extra = n if lab != "vector" else 2 * n
+        elif method == "swan":
+            # Adam on first + last layers; stateless elsewhere
+            extra = 2 * n if lab in ("first", "last", "vector") else 0
+        elif method == "scale":
+            # momentum on last layer only; Adam on vectors (negligible)
+            if lab == "last":
+                extra = n
+            elif lab == "vector":
+                extra = 2 * n
+            else:
+                extra = 0
+        elif method in ("galore", "fira"):
+            if lab == "matrix":
+                extra = _proj_state_sizes(shape, rank, store_projector=True)
+            else:
+                extra = 2 * n
+        elif method == "apollo":
+            if lab == "matrix":
+                extra = _proj_state_sizes(shape, rank, store_projector=False)
+            else:
+                extra = 2 * n
+        elif method == "apollo_mini":
+            if lab == "matrix":
+                extra = _proj_state_sizes(shape, 1, store_projector=False)
+            else:
+                extra = 2 * n
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        total += extra
+    return total
+
+
+def memory_report(
+    shapes, method: str, dtype_bytes: int = 2, rank: int = 256,
+    rules: LabelRules | None = None,
+) -> MemoryReport:
+    leaves = jax.tree_util.tree_leaves(shapes, is_leaf=_is_shape)
+    weight_elems = sum(_size(_shape_of(l)) for l in leaves)
+    state_elems = optimizer_state_elements(shapes, method, rank=rank, rules=rules)
+    return MemoryReport(method, weight_elems * dtype_bytes, state_elems * dtype_bytes)
+
+
+METHODS = ("sgd", "sgd_momentum", "adam", "adamw", "stable_spam", "muon",
+           "swan", "galore", "fira", "apollo", "apollo_mini", "scale")

@@ -1,0 +1,119 @@
+"""Gradient normalization schemes from the paper, eq. (6).
+
+Convention: matrix parameters are stored ``(d_in, d_out)`` (JAX kernel layout,
+``y = x @ W``).  A *column* of ``G`` is a length-``d_in`` slice ``G[:, j]``
+associated with output unit ``j`` — column-wise normalization therefore
+reduces over ``axis=-2``.  For stacked parameters (e.g. MoE experts with shape
+``(E, d_in, d_out)``) the same rule applies per leading slice.
+
+All functions accept any dtype and compute internally in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+# Quintic Newton–Schulz coefficients from Muon (Jordan et al., 2024).
+_NS_COEFFS = (3.4445, -4.7750, 2.0315)
+_NS_STEPS = 5
+
+
+def _as_f32(g: jnp.ndarray) -> jnp.ndarray:
+    return g.astype(jnp.float32)
+
+
+def colnorm(g: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
+    """Column-wise normalization: normalize along the output dimension.
+
+    ``out[:, j] = g[:, j] / ||g[:, j]||_2``; reduction over ``axis=-2``.
+
+    The f32 math lives only inside the (fused) reduction and the broadcast
+    scale — a full-size f32 copy of ``g`` is never materialized (matters for
+    the stacked-layer gradients of 100B+ models: GBs per leaf).
+    """
+    if g.ndim < 2:
+        raise ValueError(f"colnorm expects a matrix, got shape {g.shape}")
+    ss = jnp.sum(jnp.square(g.astype(jnp.float32)), axis=-2, keepdims=True)
+    inv = (1.0 / (jnp.sqrt(ss) + eps)).astype(g.dtype)
+    return g * inv
+
+
+def rownorm(g: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
+    """Row-wise normalization: normalize along the input dimension."""
+    if g.ndim < 2:
+        raise ValueError(f"rownorm expects a matrix, got shape {g.shape}")
+    ss = jnp.sum(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = (1.0 / (jnp.sqrt(ss) + eps)).astype(g.dtype)
+    return g * inv
+
+
+def signnorm(g: jnp.ndarray) -> jnp.ndarray:
+    """Sign normalization (sign-SGD direction)."""
+    return jnp.sign(g).astype(g.dtype)
+
+
+def _ns_iteration_2d(g: jnp.ndarray, steps: int) -> jnp.ndarray:
+    """Newton–Schulz orthogonalization of a single (m, n) matrix, m <= n."""
+    a, b, c = _NS_COEFFS
+    x = g / (jnp.linalg.norm(g) + 1e-7)
+
+    def body(x, _):
+        xxt = x @ x.T
+        bxc = b * xxt + c * (xxt @ xxt)
+        x = a * x + bxc @ x
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, None, length=steps)
+    return x
+
+
+def ns_orthogonalize(g: jnp.ndarray, steps: int = _NS_STEPS) -> jnp.ndarray:
+    """Inexact singular-value normalization ``U V^T`` via Newton–Schulz.
+
+    Matches Muon's quintic iteration; computed in float32 (paper uses bf16 on
+    GPU; f32 keeps the CPU oracle stable). Supports stacked (..., m, n) inputs.
+    """
+    if g.ndim < 2:
+        raise ValueError(f"ns_orthogonalize expects a matrix, got {g.shape}")
+    gf = _as_f32(g)
+    d_in, d_out = gf.shape[-2], gf.shape[-1]
+    transpose = d_in > d_out
+    if transpose:
+        gf = jnp.swapaxes(gf, -1, -2)
+    if gf.ndim == 2:
+        out = _ns_iteration_2d(gf, steps)
+    else:
+        batch_shape = gf.shape[:-2]
+        flat = gf.reshape((-1,) + gf.shape[-2:])
+        out = jax.vmap(lambda m: _ns_iteration_2d(m, steps))(flat)
+        out = out.reshape(batch_shape + out.shape[-2:])
+    if transpose:
+        out = jnp.swapaxes(out, -1, -2)
+    return out.astype(g.dtype)
+
+
+def svd_orthogonalize(g: jnp.ndarray) -> jnp.ndarray:
+    """Exact singular-value normalization ``U V^T`` (reference / Table 1)."""
+    gf = _as_f32(g)
+    u, _, vt = jnp.linalg.svd(gf, full_matrices=False)
+    return (u @ vt).astype(g.dtype)
+
+
+NORMALIZATIONS = {
+    "col": colnorm,
+    "row": rownorm,
+    "sign": signnorm,
+    "ns": ns_orthogonalize,
+    "svd": svd_orthogonalize,
+    "none": lambda g: g,
+}
+
+
+def normalize(g: jnp.ndarray, kind: str) -> jnp.ndarray:
+    try:
+        fn = NORMALIZATIONS[kind]
+    except KeyError:
+        raise ValueError(f"unknown normalization {kind!r}; options {list(NORMALIZATIONS)}")
+    return fn(g)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (paper Appendix C: cosine + 10% linear warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import Schedule
+
+
+def constant(lr: float) -> Schedule:
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def linear_warmup_cosine(
+    peak_lr: float,
+    total_steps: int,
+    warmup_frac: float = 0.1,
+    final_frac: float = 0.1,
+) -> Schedule:
+    warmup_steps = max(1, int(total_steps * warmup_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        progress = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+
+    return f

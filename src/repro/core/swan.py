@@ -1,0 +1,82 @@
+"""SWAN (Ma et al., 2025): stateless SGD with GradNorm + GradWhitening.
+
+Hidden matrices: (1) GradNorm — row-wise standardization (zero mean / unit
+variance along the input dimension); (2) GradWhitening — (GG^T)^{-1/2} G,
+approximated with the same Newton–Schulz iteration Muon uses.
+First/last layers and vector params run full Adam (as in the original paper,
+which is why SWAN's memory saving shrinks for small models — paper §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .labels import LabelRules, label_tree
+from .normalization import ns_orthogonalize
+from .optimizers import _adam_leaf, _empty, _lr_at, _zeros
+from .types import GradientTransformation, PyTree, Schedule
+
+_f32 = jnp.float32
+
+
+class SwanState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree  # adam-m for first/last/vector only
+    nu: PyTree
+
+
+def swan_normalize(g: jnp.ndarray, ns_steps: int = 5) -> jnp.ndarray:
+    """GradNorm (row standardize) + GradWhitening (NS orthogonalization)."""
+    gf = g.astype(_f32)
+    mean = jnp.mean(gf, axis=-1, keepdims=True)
+    std = jnp.std(gf, axis=-1, keepdims=True)
+    gn = (gf - mean) / (std + 1e-8)
+    return ns_orthogonalize(gn, ns_steps).astype(g.dtype)
+
+
+def swan(
+    lr: Schedule | float,
+    ns_steps: int = 5,
+    adam_lr: Schedule | float | None = None,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    rules: Optional[LabelRules] = None,
+) -> GradientTransformation:
+    rules = rules or LabelRules()
+    adam_lr = adam_lr if adam_lr is not None else lr
+
+    def init(params):
+        labels = label_tree(params, rules)
+        mk = lambda lab, p: _zeros(p) if lab != "matrix" else _empty(p)
+        mu = jax.tree_util.tree_map(mk, labels, params)
+        nu = jax.tree_util.tree_map(mk, labels, params)
+        return SwanState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state, params=None):
+        del params
+        labels = label_tree(grads, rules)
+        count = state.count
+        lr_t = _lr_at(lr, count)
+        alr_t = _lr_at(adam_lr, count)
+
+        def leaf(lab, g, m, v):
+            if lab == "matrix":
+                return -lr_t * swan_normalize(g, ns_steps), m, v
+            upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
+            return -alr_t * upd, m, v
+
+        out = jax.tree_util.tree_map(leaf, labels, grads, state.mu, state.nu)
+        istup = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
+            SwanState(
+                count + 1,
+                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
+                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
+            ),
+        )
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernels for column-wise gradient normalization.
+
+The SCALE optimizer step is HBM-bandwidth-bound: every parameter matrix and
+its gradient stream through HBM once per step. The fused kernels here avoid
+materializing the normalized gradient:
+
+  * ``col_sumsq``   — tiled reduction over the input (sublane) dimension,
+    f32 accumulator in VMEM scratch. Grid is (col_tiles, row_tiles) with the
+    row axis innermost, exploiting Pallas TPU's sequential grid execution to
+    accumulate across row tiles and emit once per column tile.
+  * ``colnorm_apply`` / ``update_apply`` — element-wise tiles consuming the
+    (1, n) sums-of-squares; ``update_apply`` fuses the SGD subtraction so
+    theta/g are read once and theta written once (3 HBM passes total versus
+    5 for the unfused jnp sequence).
+
+Tile sizes default to (256, 256): 256x256xf32 = 256 KiB per operand tile,
+three operands + scratch < 2 MiB, comfortably inside a v5e core's 16 MiB
+VMEM while keeping both dims multiples of the (8, 128) f32 tiling and the
+128-lane VPU/MXU width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _col_sumsq_kernel(g_ref, out_ref, acc_ref, *, n_row_tiles: int):
+    i = pl.program_id(1)  # row tile (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    gf = g_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(gf * gf, axis=0, keepdims=True)
+
+    @pl.when(i == n_row_tiles - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...]
+
+
+def col_sumsq(g: jnp.ndarray, block=DEFAULT_BLOCK, interpret: bool = True):
+    m, n = g.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (g.shape, block)
+    grid = (n // bn, m // bm)  # columns outer, rows inner (sequential accum)
+    return pl.pallas_call(
+        functools.partial(_col_sumsq_kernel, n_row_tiles=grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=interpret,
+    )(g)
+
+
+def _colnorm_apply_kernel(g_ref, ss_ref, out_ref, *, eps: float):
+    norm = jnp.sqrt(ss_ref[...]) + eps
+    out_ref[...] = (g_ref[...].astype(jnp.float32) / norm).astype(out_ref.dtype)
+
+
+def colnorm_apply(g, ss, block=DEFAULT_BLOCK, eps: float = 1e-8,
+                  interpret: bool = True):
+    m, n = g.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        functools.partial(_colnorm_apply_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((1, bn), lambda j, i: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g.dtype),
+        interpret=interpret,
+    )(g, ss)
+
+
+def _update_apply_kernel(theta_ref, g_ref, ss_ref, lr_ref, out_ref, *, eps: float):
+    norm = jnp.sqrt(ss_ref[...]) + eps
+    upd = theta_ref[...].astype(jnp.float32) - \
+        lr_ref[0, 0] * g_ref[...].astype(jnp.float32) / norm
+    out_ref[...] = upd.astype(out_ref.dtype)
+
+
+def update_apply(theta, g, ss, lr, block=DEFAULT_BLOCK, eps: float = 1e-8,
+                 interpret: bool = True):
+    m, n = theta.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (n // bn, m // bm)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_update_apply_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), theta.dtype),
+        interpret=interpret,
+    )(theta, g, ss, lr_arr)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the column-norm kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def col_sumsq(g: jnp.ndarray) -> jnp.ndarray:
+    """Sum of squares per column (f32). g (m, n) -> (1, n)."""
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf, axis=0, keepdims=True)
+
+
+def colnorm(g: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
+    """g / (||col||_2 + eps), per column."""
+    gf = g.astype(jnp.float32)
+    norms = jnp.sqrt(col_sumsq(g))
+    return (gf / (norms + eps)).astype(g.dtype)
+
+
+def colnorm_update(theta: jnp.ndarray, g: jnp.ndarray, lr,
+                   eps: float = EPS) -> jnp.ndarray:
+    """theta - lr * colnorm(g)  (the SCALE matrix update)."""
+    return (theta.astype(jnp.float32)
+            - jnp.asarray(lr, jnp.float32) * colnorm(g).astype(jnp.float32)
+            ).astype(theta.dtype)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused LM-head momentum + column-norm update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def momentum_colnorm(m: jnp.ndarray, g: jnp.ndarray, beta,
+                     eps: float = EPS):
+    """m_new = beta*m + (1-beta)*g ; d = colnorm(m_new). Returns (m_new, d)."""
+    beta = jnp.asarray(beta, jnp.float32)
+    m_new = beta * m.astype(jnp.float32) + (1.0 - beta) * g.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(m_new * m_new, axis=0, keepdims=True))
+    return m_new, m_new / (norms + eps)
+
+
+def head_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray, beta, lr,
+                eps: float = EPS):
+    """Full fused head step. Returns (theta_new, m_new)."""
+    m_new, d = momentum_colnorm(m, g, beta, eps)
+    theta_new = (theta.astype(jnp.float32)
+                 - jnp.asarray(lr, jnp.float32) * d).astype(theta.dtype)
+    return theta_new, m_new

@@ -1,0 +1,94 @@
+"""Pallas TPU kernels for the fused SCALE LM-head update.
+
+The LM head is the only stateful matrix in SCALE (first-order momentum).
+Its step streams four HBM tensors (theta, m, g -> theta', m'); the naive
+sequence (EMA, colnorm, axpy) makes ~7 passes. Fused here into two:
+
+  * ``momentum_sumsq`` — writes m' = beta*m + (1-beta)*g tile-by-tile while
+    accumulating sum(m'^2) per column in VMEM scratch (rows innermost grid
+    axis -> sequential accumulation), emitting (1, n) sums once per column
+    tile. One read of m and g, one write of m'.
+  * ``head_update_apply`` — theta' = theta - lr * m'/(||col m'||+eps):
+    one read of theta and m', one write of theta'.
+
+The vocab dimension of an LM head is always a multiple of 128 (configs pad),
+so tiles stay MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, m_out_ref, ss_ref, acc_ref,
+                           *, n_row_tiles: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    beta = beta_ref[0, 0]
+    m_new = beta * m_ref[...].astype(jnp.float32) + \
+        (1.0 - beta) * g_ref[...].astype(jnp.float32)
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+    acc_ref[...] += jnp.sum(m_new * m_new, axis=0, keepdims=True)
+
+    @pl.when(i == n_row_tiles - 1)
+    def _emit():
+        ss_ref[...] = acc_ref[...]
+
+
+def momentum_sumsq(m, g, beta, block=DEFAULT_BLOCK, interpret: bool = True):
+    mm, n = m.shape
+    bm, bn = min(block[0], mm), min(block[1], n)
+    assert mm % bm == 0 and n % bn == 0, (m.shape, block)
+    grid = (n // bn, mm // bm)
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_momentum_sumsq_kernel, n_row_tiles=grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                   pl.BlockSpec((1, bn), lambda j, i: (0, j))],
+        out_shape=[jax.ShapeDtypeStruct((mm, n), jnp.float32),
+                   jax.ShapeDtypeStruct((1, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=interpret,
+    )(m, g, beta_arr)
+
+
+def _head_update_kernel(theta_ref, m_ref, ss_ref, lr_ref, out_ref, *, eps: float):
+    norm = jnp.sqrt(ss_ref[...]) + eps
+    upd = theta_ref[...].astype(jnp.float32) - \
+        lr_ref[0, 0] * m_ref[...].astype(jnp.float32) / norm
+    out_ref[...] = upd.astype(out_ref.dtype)
+
+
+def head_update_apply(theta, m_new, ss, lr, block=DEFAULT_BLOCK,
+                      eps: float = 1e-8, interpret: bool = True):
+    mm, n = theta.shape
+    bm, bn = min(block[0], mm), min(block[1], n)
+    grid = (n // bn, mm // bm)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_head_update_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+                  pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), theta.dtype),
+        interpret=interpret,
+    )(theta, m_new, ss, lr_arr)

@@ -1,0 +1,1 @@
+"""repro.launch — production meshes, dry-run, roofline, training CLI."""

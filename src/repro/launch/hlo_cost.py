@@ -1,0 +1,336 @@
+"""Recursive HLO cost analyzer with while-loop trip-count awareness.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, which
+undercounts scanned-layer models by orders of magnitude. The compiled HLO
+text, however, annotates loops with ``known_trip_count``; this module parses
+the post-optimization module and accumulates, per device:
+
+  * flops            — 2*prod(out)*prod(contracted) for dot/conv (descending
+                       into fusions), + 1 flop/elem for elementwise arithmetic
+  * bytes_accessed   — operands + outputs at fusion/instruction granularity
+                       (fusion internals are VMEM-resident, XLA's own model)
+  * collective bytes — ring-model moved bytes per collective kind
+
+Every quantity is multiplied by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|token)"
+    r"\[([0-9,]*)\]")
+
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+# result name = <type...> <opcode>(  — the type never contains '(', so the
+# first lowercase-word-followed-by-paren is the opcode.
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([a-z][\w\-]*)\((.*)$")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "negate", "abs", "sign",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "cosine", "sine", "expm1", "log1p", "erf"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota",
+               "copy-start", "copy-done"}
+# Ops that touch only a window of their (possibly huge) operands: count the
+# actually-moved bytes, not the whole buffer (a dynamic-slice of the stacked
+# layer params inside a scan reads one layer, not all L).
+_WINDOW_READS = {"dynamic-slice", "slice", "gather", "broadcast", "reshape",
+                 "convert", "copy", "transpose", "reverse", "pad"}
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _elems_of(type_str: str) -> int:
+    total = 0
+    for _, shape in _shapes_in(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    type_str: str
+    op: str
+    rest: str              # everything after the opening paren
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    insts: List[Inst]
+    by_name: Dict[str, Inst]
+
+
+def _parse_operands(rest: str) -> List[str]:
+    # operand list = %names inside the first balanced (...) chunk
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w\.\-]+)", rest[:end])
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HDR.match(stripped)
+                if m:
+                    cur = Computation(m.group(1), [], {})
+                    if stripped.startswith("ENTRY"):
+                        entry_name = m.group(1)
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        inst = Inst(name, type_str, op, rest, _parse_operands(rest))
+        cur.insts.append(inst)
+        cur.by_name[name] = inst
+    if entry_name is not None and entry_name in comps:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _group_size(rest: str, default: int = 2) -> int:
+    m = _GROUP_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUP2_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    out_elems = _elems_of(inst.type_str)
+    m = _CDIM_RE.search(inst.rest)
+    contracted = 1
+    if m and inst.operands:
+        lhs = comp.by_name.get(inst.operands[0])
+        if lhs is not None:
+            shapes = _shapes_in(lhs.type_str)
+            if shapes:
+                lshape = shapes[0][1]
+                for d in m.group(1).split(","):
+                    if d != "" and int(d) < len(lshape):
+                        contracted *= lshape[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _operand_bytes(inst: Inst, comp: Computation) -> int:
+    total = 0
+    for op_name in inst.operands:
+        ref = comp.by_name.get(op_name)
+        if ref is not None:
+            total += _bytes_of(ref.type_str)
+    return total
+
+
+def _fusion_bytes(fcomp: Computation) -> int:
+    """HBM traffic of one fusion: window-aware parameter reads + output.
+
+    A parameter consumed only by slice-like ops contributes the window size;
+    otherwise the full parameter (once). Output = the root's size (in-place
+    dynamic-update-slice roots count the update window instead).
+    """
+    total = 0
+    counted = set()
+    for inst in fcomp.insts:
+        for i, opn in enumerate(inst.operands):
+            ref = fcomp.by_name.get(opn)
+            if ref is None or ref.op != "parameter" or opn in counted:
+                continue
+            if inst.op in _WINDOW_READS:
+                total += _bytes_of(inst.type_str)
+                counted.add(opn)
+            elif inst.op == "dynamic-update-slice" and i == 0:
+                counted.add(opn)  # in-place target: written region counted via root
+            else:
+                total += _bytes_of(ref.type_str)
+                counted.add(opn)
+    if fcomp.insts:
+        root = fcomp.insts[-1]
+        if root.op == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = fcomp.by_name.get(root.operands[1])
+            total += 2 * (_bytes_of(upd.type_str) if upd is not None
+                          else _bytes_of(root.type_str))
+        else:
+            total += _bytes_of(root.type_str)
+    return total
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[str, Cost], flops_only: bool = False) -> Cost:
+    key = comp.name + ("#f" if flops_only else "")
+    if key in memo:
+        return memo[key]
+    cost = Cost()
+    memo[key] = cost  # break cycles defensively
+    for inst in comp.insts:
+        op = inst.op
+        base_kind = op[:-6] if op.endswith("-start") else op
+        if base_kind in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            out_b = _bytes_of(inst.type_str)
+            g = _group_size(inst.rest)
+            if base_kind == "all-reduce":
+                moved = 2.0 * out_b * (g - 1) / max(g, 1)
+            elif base_kind == "reduce-scatter":
+                moved = float(out_b * (g - 1))
+            else:
+                moved = float(out_b)
+            cost.coll_bytes[base_kind] += moved
+            cost.coll_counts[base_kind] += 1
+            if not flops_only:
+                cost.bytes_accessed += out_b + _operand_bytes(inst, comp)
+            continue
+        if op == "while":
+            m = _TRIP_RE.search(inst.rest)
+            trips = int(m.group(1)) if m else 1
+            called = _CALL_RE.search(inst.rest)
+            body_names = re.findall(r"body=%?([\w\.\-]+)", inst.rest)
+            for bn in body_names:
+                body = comps.get(bn)
+                if body is not None:
+                    cost.add(_comp_cost(body, comps, memo, flops_only), trips)
+            continue
+        if op in ("fusion", "call", "async-start"):
+            m = _CALL_RE.search(inst.rest)
+            inner_comp = comps.get(m.group(1)) if m else None
+            if inner_comp is not None:
+                inner = _comp_cost(inner_comp, comps, memo, flops_only=True)
+                cost.flops += inner.flops
+                cost.transcendentals += inner.transcendentals
+                for k in _COLLECTIVES:
+                    cost.coll_bytes[k] += inner.coll_bytes[k]
+                    cost.coll_counts[k] += inner.coll_counts[k]
+            if not flops_only:
+                if inner_comp is not None and op == "fusion":
+                    cost.bytes_accessed += _fusion_bytes(inner_comp)
+                else:
+                    cost.bytes_accessed += _bytes_of(inst.type_str) + \
+                        _operand_bytes(inst, comp)
+            continue
+        if op == "conditional":
+            m = _COND_BRANCHES_RE.search(inst.rest)
+            names = re.findall(r"%?([\w\.\-]+)",
+                               m.group(1)) if m else []
+            names += re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)",
+                                inst.rest)
+            for bn in names:
+                if bn in comps:
+                    cost.add(_comp_cost(comps[bn], comps, memo, flops_only), 1.0)
+            continue
+        if op in ("dot", "convolution"):
+            cost.flops += _dot_flops(inst, comp)
+            if not flops_only:
+                cost.bytes_accessed += _bytes_of(inst.type_str) + \
+                    _operand_bytes(inst, comp)
+            continue
+        if op in _ELEMENTWISE:
+            cost.flops += _elems_of(inst.type_str)
+        elif op in _TRANSCENDENTAL:
+            cost.transcendentals += _elems_of(inst.type_str)
+        if not flops_only and op not in _SKIP_BYTES:
+            if op in _WINDOW_READS:
+                b = 2 * _bytes_of(inst.type_str)
+            elif op == "dynamic-update-slice":
+                upd = (comp.by_name.get(inst.operands[1])
+                       if len(inst.operands) > 1 else None)
+                b = 2 * (_bytes_of(upd.type_str) if upd is not None
+                         else _bytes_of(inst.type_str))
+            else:
+                b = _bytes_of(inst.type_str) + _operand_bytes(inst, comp)
+            cost.bytes_accessed += b
+    memo[key] = cost
+    return cost
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps.values(), key=lambda c: len(c.insts))
+    return _comp_cost(entry, comps, {})

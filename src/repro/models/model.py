@@ -1,0 +1,245 @@
+"""Top-level model API: init / forward / loss / caches / logical axes.
+
+Parameter tree layout (labels drive the SCALE optimizer branches):
+
+    {"tok_embed": {"w"},                  # 'first' group
+     "segments": {"seg<i>_<kind>": {...stacked super-block params...}},
+     "final_norm": {"s"},
+     "lm_head": {"w"}}                    # 'last' group (momentum)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import transformer as T
+from .config import ModelConfig
+from .sharding import Rules, shard
+
+_is_spec = lambda x: isinstance(x, L.Spec)
+
+
+# ----------------------------------------------------------------- spec tree
+
+def _embed_spec(cfg: ModelConfig) -> dict:
+    V, D = cfg.padded_vocab, cfg.d_model
+    if cfg.family == "audio":
+        return {"w": L.Spec((cfg.n_codebooks, V, D), (None, "vocab", "embed"))}
+    return {"w": L.Spec((V, D), ("vocab", "embed"))}
+
+
+def _head_spec(cfg: ModelConfig) -> dict:
+    V, D = cfg.padded_vocab, cfg.d_model
+    if cfg.family == "audio":
+        return {"w": L.Spec((cfg.n_codebooks, D, V), (None, "embed", "vocab"))}
+    return {"w": L.Spec((D, V), ("embed", "vocab"))}
+
+
+def _stacked(spec_tree: dict, n: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: L.Spec((n,) + tuple(s.shape), (None,) + tuple(s.axes), s.init),
+        spec_tree, is_leaf=_is_spec)
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    segs = {}
+    for i, (kind, n) in enumerate(cfg.segments):
+        segs[f"seg{i}_{kind}"] = _stacked(T.superblock_spec(cfg, kind), n)
+    out = {
+        "tok_embed": _embed_spec(cfg),
+        "segments": segs,
+        "final_norm": {"s": L.Spec((cfg.d_model,), ("norm",), "ones")},
+        "lm_head": _head_spec(cfg),
+    }
+    if cfg.pos_embed == "learned":
+        out["pos_embed"] = {"w": L.Spec((cfg.max_position, cfg.d_model),
+                                        (None, "embed"))}
+    return out
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    return L.shapes_from_spec(model_spec(cfg))
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    return L.axes_from_spec(model_spec(cfg))
+
+
+def count_params(shapes, cfg: Optional[ModelConfig] = None,
+                 active_only: bool = False) -> int:
+    """Total (or MoE-active) parameter count from a shapes tree."""
+    import numpy as np
+    if not active_only or cfg is None or not cfg.n_experts:
+        return int(sum(np.prod(s) for s in jax.tree_util.tree_leaves(
+            shapes, is_leaf=lambda x: isinstance(x, tuple))))
+    spec = model_spec(cfg)
+    total = 0
+    for s in jax.tree_util.tree_leaves(spec, is_leaf=_is_spec):
+        n = int(np.prod(s.shape))
+        if "experts" in s.axes:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return int(total)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    spec = model_spec(cfg)
+    dtype = cfg.jdtype
+    flat = {}
+    keys = jax.random.split(key, 3 + len(cfg.segments))
+    flat["tok_embed"] = L.init_from_spec(keys[0], spec["tok_embed"], dtype)
+    flat["final_norm"] = L.init_from_spec(keys[1], spec["final_norm"], dtype)
+    flat["lm_head"] = L.init_from_spec(keys[2], spec["lm_head"], dtype)
+    if "pos_embed" in spec:
+        flat["pos_embed"] = L.init_from_spec(
+            jax.random.fold_in(key, 99), spec["pos_embed"], dtype)
+    segs = {}
+    for i, (kind, n) in enumerate(cfg.segments):
+        sb_spec = T.superblock_spec(cfg, kind)
+        ks = jax.random.split(keys[3 + i], n)
+        segs[f"seg{i}_{kind}"] = jax.vmap(
+            lambda k: L.init_from_spec(k, sb_spec, dtype))(ks)
+    flat["segments"] = segs
+    return flat
+
+
+# -------------------------------------------------------------------- cache
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.jdtype
+    out = {}
+    for i, (kind, n) in enumerate(cfg.segments):
+        one = T.superblock_cache(cfg, kind, batch, max_seq, dtype)
+        out[f"seg{i}_{kind}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), one)
+    return out
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    return {f"seg{i}_{kind}": T.cache_axes(cfg, kind)
+            for i, (kind, n) in enumerate(cfg.segments)}
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
+            mode: str = "train", cache=None, cache_index=None,
+            rules: Optional[Rules] = None):
+    """Run the backbone. Returns (hidden, new_cache, aux_loss)."""
+    rules = rules or Rules(cfg.rule_overrides)
+    ew = params["tok_embed"]["w"]
+    if cfg.family == "audio":
+        # tokens (B, n_codebooks, S): sum codebook embeddings
+        x = sum(jnp.take(ew[c], tokens[:, c], axis=0)
+                for c in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(ew, tokens, axis=0)
+    x = shard(x, ("act_batch", "act_seq", "act_embed"), rules)
+
+    S = x.shape[1]
+    if mode == "decode":
+        positions = cache_index + jnp.arange(S)
+    else:
+        positions = jnp.arange(S)
+    if cfg.pos_embed == "learned":
+        x = x + jnp.take(params["pos_embed"]["w"], positions, axis=0)
+
+    new_cache = {} if cache is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, (kind, n) in enumerate(cfg.segments):
+        name = f"seg{i}_{kind}"
+        seg_cache = cache[name] if cache is not None else None
+        x, seg_cache, seg_aux = T.apply_segment(
+            kind, n, cfg, params["segments"][name], x, positions, rules,
+            mode, seg_cache, cache_index, image_embeds)
+        if new_cache is not None:
+            new_cache[name] = seg_cache
+        aux = aux + seg_aux
+    x = L.rmsnorm(x, params["final_norm"]["s"], cfg.rms_eps)
+    return x, new_cache, aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden,
+                       rules: Optional[Rules] = None):
+    """Full-vocab logits (serving). hidden (B,S,D) -> (B,S,V[,per codebook])."""
+    rules = rules or Rules(cfg.rule_overrides)
+    w = params["lm_head"]["w"]
+    if cfg.family == "audio":
+        out = jnp.einsum("bsd,cdv->bcsv", hidden, w)
+    else:
+        out = hidden @ w
+    out = _mask_pad_vocab(out, cfg)
+    return shard(out, ("act_batch", "act_seq", "act_vocab"), rules)
+
+
+def _mask_pad_vocab(logits, cfg: ModelConfig):
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    neg = jnp.asarray(-1e9, logits.dtype)
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(idx < cfg.vocab_size, logits, neg)
+
+
+def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules):
+    """h (B,c,D), w (D,V), labels (B,c) -> (sum_loss, sum_weight)."""
+    logits = (h_chunk @ w).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    logits = shard(logits, ("act_batch", "act_seq", "act_vocab"), rules)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.clip(labels_chunk, 0)
+    ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    weight = (labels_chunk >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * weight), jnp.sum(weight)
+
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels,
+            rules: Optional[Rules] = None):
+    """Chunked cross-entropy: logits never materialize for the full sequence.
+
+    labels: (B,S) int32, -1 = masked; audio: (B, n_codebooks, S).
+    Returns (mean_loss, total_weight).
+    """
+    rules = rules or Rules(cfg.rule_overrides)
+    w = params["lm_head"]["w"]
+    B, S = hidden.shape[0], hidden.shape[1]
+    chunk = min(cfg.loss_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nch = S // chunk
+
+    def per_head(wh, labs):
+        def body(carry, i):
+            s0 = i * chunk
+            h_c = jax.lax.dynamic_slice_in_dim(hidden, s0, chunk, 1)
+            l_c = jax.lax.dynamic_slice_in_dim(labs, s0, chunk, 1)
+            ls, ws = _xent_chunk(h_c, wh, l_c, cfg, rules)
+            return (carry[0] + ls, carry[1] + ws), None
+
+        (ls, ws), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(nch))
+        return ls, ws
+
+    if cfg.family == "audio":
+        tot_l = tot_w = 0.0
+        for c in range(cfg.n_codebooks):
+            ls, ws = per_head(w[c], labels[:, c])
+            tot_l, tot_w = tot_l + ls, tot_w + ws
+        return tot_l / jnp.maximum(tot_w, 1.0), tot_w
+    ls, ws = per_head(w, labels)
+    return ls / jnp.maximum(ws, 1.0), ws
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, aux_coef: float = 0.01,
+            rules: Optional[Rules] = None):
+    """Full training loss. batch: tokens, labels, [image_embeds]."""
+    hidden, _, aux = forward(params, cfg, batch["tokens"],
+                             image_embeds=batch.get("image_embeds"),
+                             mode="train", rules=rules)
+    loss, weight = lm_loss(params, cfg, hidden, batch["labels"], rules=rules)
+    total = loss + aux_coef * aux
+    return total, {"loss": loss, "aux": aux, "weight": weight}

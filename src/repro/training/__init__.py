@@ -1,0 +1,4 @@
+from .trainer import TrainState, init_state, make_eval_step, make_train_step
+from .serving import ServeState, greedy_generate, make_decode_step, make_prefill_step
+__all__ = ["TrainState", "init_state", "make_eval_step", "make_train_step",
+           "ServeState", "greedy_generate", "make_decode_step", "make_prefill_step"]

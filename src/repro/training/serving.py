@@ -1,0 +1,77 @@
+"""Serving-step factories: batched prefill + single-token decode with a
+persistent sharded KV/SSM cache. These are the functions the inference
+dry-run cells lower (``prefill_32k`` / ``decode_32k`` / ``long_500k``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (forward, init_cache, logits_from_hidden)
+from repro.models.sharding import Rules
+
+
+class ServeState(NamedTuple):
+    cache: Any
+    index: jnp.ndarray  # current cache fill (next write position)
+
+
+def make_prefill_step(cfg, max_seq: int, rules: Optional[Rules] = None):
+    """prefill(params, tokens[, image_embeds]) -> (ServeState, last_logits).
+
+    The returned cache is sized ``max_seq`` so decode can continue in place.
+    """
+    rules = rules or Rules(cfg.rule_overrides)
+
+    def prefill_step(params, tokens, image_embeds=None):
+        B = tokens.shape[0]
+        S = tokens.shape[-1]
+        cache = init_cache(cfg, B, max_seq)
+        hidden, pre_cache, _ = forward(params, cfg, tokens,
+                                       image_embeds=image_embeds,
+                                       mode="prefill", cache=cache,
+                                       rules=rules)
+
+        def merge(full, pre):
+            if full.shape == pre.shape:
+                return pre.astype(full.dtype)
+            return jax.lax.dynamic_update_slice(
+                full, pre.astype(full.dtype), (0,) * full.ndim)
+
+        cache = jax.tree_util.tree_map(merge, cache, pre_cache)
+        logits = logits_from_hidden(params, cfg, hidden[:, -1:], rules=rules)
+        return ServeState(cache, jnp.asarray(S, jnp.int32)), logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg, rules: Optional[Rules] = None):
+    """decode(params, state, tokens) -> (state, logits). tokens (B, 1)."""
+    rules = rules or Rules(cfg.rule_overrides)
+
+    def decode_step(params, state: ServeState, tokens, image_embeds=None):
+        hidden, cache, _ = forward(params, cfg, tokens,
+                                   image_embeds=image_embeds, mode="decode",
+                                   cache=state.cache, cache_index=state.index,
+                                   rules=rules)
+        logits = logits_from_hidden(params, cfg, hidden, rules=rules)
+        return ServeState(cache, state.index + tokens.shape[-1]), logits
+
+    return decode_step
+
+
+def greedy_generate(cfg, params, prompt, n_steps: int, max_seq: int,
+                    rules: Optional[Rules] = None):
+    """Greedy generation loop (prefill + jitted decode steps)."""
+    prefill = jax.jit(make_prefill_step(cfg, max_seq, rules))
+    decode = jax.jit(make_decode_step(cfg, rules))
+    state, logits = prefill(params, prompt)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(n_steps - 1):
+        state, logits = decode(params, state, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,84 @@
+"""Unit + property tests for the gradient normalizations (paper eq. 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (colnorm, ns_orthogonalize, rownorm, signnorm,
+                        svd_orthogonalize, normalize)
+
+DIMS = st.integers(2, 24)
+
+
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_colnorm_unit_columns(m, n, seed):
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (m, n)))
+    g = g + np.sign(g) * 0.1  # keep columns away from zero
+    out = np.asarray(colnorm(jnp.asarray(g)))
+    norms = np.linalg.norm(out, axis=0)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**16),
+       scale=st.floats(0.01, 100.0))
+@settings(max_examples=40, deadline=None)
+def test_colnorm_scale_invariant(m, n, seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (m, n)) + 0.1
+    a = np.asarray(colnorm(g))
+    b = np.asarray(colnorm(g * scale))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_rownorm_unit_rows():
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 16)) + 0.1
+    out = np.asarray(rownorm(g))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=1), 1.0, atol=1e-5)
+
+
+def test_signnorm():
+    g = jnp.asarray([[1.5, -2.0], [0.0, 3.0]])
+    np.testing.assert_array_equal(np.asarray(signnorm(g)),
+                                  [[1.0, -1.0], [0.0, 1.0]])
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (8, 32), (32, 8)])
+def test_ns_singular_values_near_one(shape):
+    """Muon's quintic NS drives singular values into ~[0.7, 1.2] in 5 steps
+    (it deliberately trades exactness for speed vs true UV^T)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), shape)
+    ns = np.asarray(ns_orthogonalize(g)).astype(np.float64)
+    sv_in = np.linalg.svd(np.asarray(g), compute_uv=False)
+    sv_out = np.linalg.svd(ns, compute_uv=False)
+    assert sv_in.max() / sv_in.min() > 2.0      # input was ill-conditioned
+    assert sv_out.min() > 0.3 and sv_out.max() < 1.6
+
+
+def test_ns_orthogonal_rows():
+    g = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    o = np.asarray(ns_orthogonalize(g)).astype(np.float64)
+    gram = o @ o.T
+    np.testing.assert_allclose(gram, np.eye(8), atol=0.25)
+
+
+def test_stacked_colnorm():
+    """Stacked (E, d_in, d_out) params normalize per slice per column."""
+    g = jax.random.normal(jax.random.PRNGKey(3), (3, 8, 16)) + 0.1
+    out = np.asarray(colnorm(g))
+    norms = np.linalg.norm(out, axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+def test_colnorm_vs_rownorm_transpose_duality():
+    g = jax.random.normal(jax.random.PRNGKey(4), (8, 16)) + 0.1
+    np.testing.assert_allclose(np.asarray(colnorm(g)),
+                               np.asarray(rownorm(g.T)).T, atol=1e-6)
+
+
+def test_normalize_dispatch():
+    g = jax.random.normal(jax.random.PRNGKey(5), (8, 8))
+    for kind in ("col", "row", "sign", "ns", "svd", "none"):
+        assert normalize(g, kind).shape == g.shape
+    with pytest.raises(ValueError):
+        normalize(g, "nope")

@@ -1,0 +1,153 @@
+"""Unit tests for SCALE + every baseline optimizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LabelRules, apply_updates, colnorm, label_tree,
+                        make_optimizer, OPTIMIZER_NAMES)
+from repro.core.labels import partition_sizes
+
+
+def make_params():
+    k = jax.random.PRNGKey(0)
+    return {
+        "tok_embed": {"w": jax.random.normal(k, (32, 16))},
+        "layers": {"wq": jax.random.normal(k, (2, 16, 16)),
+                   "norm": jnp.ones((2, 16))},
+        "lm_head": {"w": jax.random.normal(k, (16, 64))},
+        "bias": {"b": jnp.zeros((16,))},
+    }
+
+
+def make_grads(params, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed),
+                          len(jax.tree_util.tree_leaves(params)))
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.random.normal(k, l.shape) for k, l in zip(ks, leaves)])
+
+
+def test_labels():
+    params = make_params()
+    labels = label_tree(params)
+    assert labels["tok_embed"]["w"] == "first"
+    assert labels["lm_head"]["w"] == "last"
+    assert labels["layers"]["wq"] == "matrix"
+    assert labels["layers"]["norm"] == "vector"  # stacked norm scale
+    assert labels["bias"]["b"] == "vector"
+    sizes = partition_sizes(params)
+    assert sizes["last"] == 16 * 64 and sizes["first"] == 32 * 16
+
+
+@pytest.mark.parametrize("name", [n for n in OPTIMIZER_NAMES
+                                  if n != "scale_fused"])
+def test_optimizer_steps_finite_and_decrease_quadratic(name):
+    """3 steps on a toy quadratic: finite updates, params move."""
+    params = make_params()
+    kw = {"rank": 4} if name in ("galore", "fira", "apollo") else {}
+    tx = make_optimizer(name, 1e-2, **kw)
+    state = tx.init(params)
+    p = params
+    for _ in range(3):
+        grads = jax.tree_util.tree_map(lambda x: 0.5 * x, p)  # grad of 0.25||p||^2
+        upd, state = jax.jit(tx.update)(grads, state, p)
+        p = apply_updates(p, upd)
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(params)):
+        assert bool(jnp.all(jnp.isfinite(a)))
+    assert float(jnp.linalg.norm(p["lm_head"]["w"])) < \
+        float(jnp.linalg.norm(params["lm_head"]["w"]))
+
+
+def test_adam_matches_closed_form_scalar():
+    tx = make_optimizer("adam", 0.1, b1=0.9, b2=0.999, eps=1e-8)
+    params = {"x": jnp.asarray([2.0])}
+    state = tx.init(params)
+    g = {"x": jnp.asarray([1.0])}
+    upd, state = tx.update(g, state, params)
+    # bias-corrected first step of Adam is exactly -lr * g/(|g|+eps) = -lr
+    np.testing.assert_allclose(np.asarray(upd["x"]), [-0.1], rtol=1e-5)
+
+
+def test_scale_update_matches_manual():
+    """The SCALE matrix update is -lr * colnorm(g); head uses momentum EMA."""
+    lr, beta = 1e-2, 0.9
+    tx = make_optimizer("scale", lr, beta=beta)
+    params = make_params()
+    state = tx.init(params)
+    g1 = make_grads(params, 1)
+    upd, state = tx.update(g1, state, params)
+    np.testing.assert_allclose(
+        np.asarray(upd["layers"]["wq"]),
+        np.asarray(-lr * colnorm(g1["layers"]["wq"])), atol=1e-6)
+    m1 = (1 - beta) * g1["lm_head"]["w"]
+    np.testing.assert_allclose(np.asarray(upd["lm_head"]["w"]),
+                               np.asarray(-lr * colnorm(m1)), atol=1e-5)
+    # second step momentum recursion
+    g2 = make_grads(params, 2)
+    upd2, state = tx.update(g2, state, params)
+    m2 = beta * m1 + (1 - beta) * g2["lm_head"]["w"]
+    np.testing.assert_allclose(np.asarray(upd2["lm_head"]["w"]),
+                               np.asarray(-lr * colnorm(m2)), atol=1e-5)
+
+
+def test_scale_state_is_memory_minimal():
+    """Momentum buffers exist ONLY for the lm_head (+ tiny vector Adam)."""
+    params = make_params()
+    tx = make_optimizer("scale", 1e-3)
+    state = tx.init(params)
+    assert state.mu["lm_head"]["w"].shape == params["lm_head"]["w"].shape
+    assert state.mu["layers"]["wq"].size == 0      # stateless matrices
+    assert state.mu["tok_embed"]["w"].size == 0    # no first-layer momentum
+    assert state.nu["lm_head"]["w"].size == 0      # no 2nd moment anywhere
+    assert state.mu["bias"]["b"].shape == (16,)    # vector Adam
+
+
+def test_scale_momentum_first_last_ablation():
+    from repro.core import scale
+    tx = scale(1e-3, momentum_on=("first", "last"))
+    params = make_params()
+    state = tx.init(params)
+    assert state.mu["tok_embed"]["w"].shape == params["tok_embed"]["w"].shape
+
+
+def test_stable_spam_momentum_reset():
+    tx = make_optimizer("stable_spam", 1e-3, reset_interval=2)
+    params = {"w": jnp.ones((4, 4))}
+    state = tx.init(params)
+    g = {"w": jnp.ones((4, 4))}
+    _, state = tx.update(g, state, params)   # count 0 -> no reset (count>0 guard)
+    _, state = tx.update(g, state, params)   # count 1
+    mu_before = np.asarray(state.mu["w"]).copy()
+    _, state = tx.update(g, state, params)   # count 2 -> reset fired this step
+    assert np.all(np.abs(mu_before) > 0)
+
+
+def test_muon_adam_branch_for_head():
+    tx = make_optimizer("muon", 1e-3)
+    params = make_params()
+    state = tx.init(params)
+    g = make_grads(params)
+    upd, _ = tx.update(g, state, params)
+    # head goes through adam (not NS): update magnitude ~lr, element-wise
+    assert float(jnp.max(jnp.abs(upd["lm_head"]["w"]))) < 5e-3
+
+
+def test_galore_projection_shapes():
+    from repro.core import galore
+    tx = galore(1e-3, rank=4)
+    params = make_params()
+    state = tx.init(params)
+    # low-rank states for hidden matrices only
+    assert state.mu["layers"]["wq"].shape[-2:] in ((4, 16), (16, 4))
+    assert state.mu["lm_head"]["w"].shape == params["lm_head"]["w"].shape
+
+
+def test_schedule_warmup_cosine():
+    from repro.core import linear_warmup_cosine
+    s = linear_warmup_cosine(1.0, 100, warmup_frac=0.1, final_frac=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) <= 0.12
+    assert float(s(50)) < 1.0

@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (apply_updates, colnorm, make_optimizer,
+                        memory_report, global_norm)
+from repro.core.memory import optimizer_state_elements
+
+SMALL = st.integers(2, 12)
+
+
+@given(m=SMALL, n=SMALL, seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_scale_update_column_norm_equals_lr(m, n, seed):
+    """Per column, the SCALE matrix update has magnitude exactly lr."""
+    lr = 0.01
+    tx = make_optimizer("scale", lr)
+    params = {"layers": {"w": jnp.zeros((m, n))}}
+    g = {"layers": {"w": jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+                    + 0.1}}
+    upd, _ = tx.update(g, tx.init(params), params)
+    norms = np.linalg.norm(np.asarray(upd["layers"]["w"]), axis=0)
+    np.testing.assert_allclose(norms, lr, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_apply_updates_is_addition(seed):
+    k = jax.random.PRNGKey(seed)
+    p = {"w": jax.random.normal(k, (4, 4))}
+    u = {"w": jax.random.normal(jax.random.fold_in(k, 1), (4, 4))}
+    out = apply_updates(p, u)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(p["w"] + u["w"]), atol=1e-6)
+
+
+@given(d=st.sampled_from([64, 128]), L=st.integers(1, 6),
+       v=st.sampled_from([256, 512]))
+@settings(max_examples=15, deadline=None)
+def test_memory_invariants(d, L, v):
+    shapes = {"tok_embed": {"w": (v, d)}, "lm_head": {"w": (d, v)}}
+    for i in range(L):
+        shapes[f"l{i}"] = {"w": (d, 4 * d), "o": (4 * d, d)}
+    sgd = optimizer_state_elements(shapes, "sgd")
+    scale = optimizer_state_elements(shapes, "scale")
+    muon = optimizer_state_elements(shapes, "muon")
+    adam = optimizer_state_elements(shapes, "adam")
+    assert sgd == 0
+    assert sgd <= scale <= muon <= adam
+    assert scale == d * v  # exactly one lm_head momentum buffer
+    assert adam == 2 * sum(int(np.prod(s)) for s in
+                           [x for grp in shapes.values() for x in grp.values()])
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_momentum_ema_bounded(seed, steps):
+    """|m_t| <= max_i |g_i| under EMA with beta in (0,1)."""
+    tx = make_optimizer("scale", 1e-3, beta=0.9)
+    params = {"lm_head": {"w": jnp.zeros((4, 8))}}
+    state = tx.init(params)
+    gmax = 0.0
+    for i in range(steps):
+        g = {"lm_head": {"w": jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), i), (4, 8))}}
+        gmax = max(gmax, float(jnp.max(jnp.abs(g["lm_head"]["w"]))))
+        _, state = tx.update(g, state, params)
+    assert float(jnp.max(jnp.abs(state.mu["lm_head"]["w"]))) <= gmax + 1e-6
+
+
+@given(b=st.integers(1, 3), s=st.sampled_from([16, 32]),
+       seed=st.integers(0, 2**10))
+@settings(max_examples=8, deadline=None)
+def test_loss_chunking_invariant(b, s, seed):
+    """Chunked LM loss == unchunked softmax cross-entropy."""
+    from conftest import tiny_cfg
+    from repro.models import init_params, forward, lm_loss, logits_from_hidden
+    import dataclasses
+    cfg = tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0,
+                              cfg.vocab_size)
+    h, _, _ = forward(params, cfg, toks)
+    loss_c, _ = lm_loss(params, cfg, h, toks)
+    cfg2 = dataclasses.replace(cfg, loss_chunk=s)  # single chunk
+    loss_u, _ = lm_loss(params, cfg2, h, toks)
+    np.testing.assert_allclose(float(loss_c), float(loss_u), rtol=1e-5)
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
