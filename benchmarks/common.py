@@ -1,9 +1,35 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import contextlib
+import os
 import time
 
 import jax
+
+
+@contextlib.contextmanager
+def fused_off_unless_tpu():
+    """Pin REPRO_FUSED=off for the enclosed block on non-TPU backends.
+
+    Off-TPU the fused dispatch runs the Pallas *interpreter* — an exactness
+    oracle, orders of magnitude slower than compiled XLA. Timing it would
+    benchmark the interpreter, not the optimizer, so benchmarks compare the
+    code paths under compiled XLA instead. On TPU the env var is left
+    untouched (the user's setting, if any, is reported by the caller).
+    """
+    if jax.devices()[0].platform == "tpu":
+        yield
+        return
+    prev = os.environ.get("REPRO_FUSED")
+    os.environ["REPRO_FUSED"] = "off"
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FUSED", None)
+        else:
+            os.environ["REPRO_FUSED"] = prev
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -15,12 +15,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: norms,memory,pretrain,throughput,"
-                         "variance,roofline")
+                         "variance,roofline,fused")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (memory_table, norm_timing, pretrain_proxy, roofline,
-                   throughput, variance_analysis)
+    from . import (fused_update, memory_table, norm_timing, pretrain_proxy,
+                   roofline, throughput, variance_analysis)
     sections = {
         "norms": norm_timing,
         "memory": memory_table,
@@ -28,6 +28,7 @@ def main() -> None:
         "throughput": throughput,
         "variance": variance_analysis,
         "roofline": roofline,
+        "fused": fused_update,
     }
     only = set(args.only.split(",")) if args.only else set(sections)
 

@@ -15,7 +15,7 @@ from repro.configs import get_arch
 from repro.core import make_optimizer
 from repro.models import init_params
 
-from .common import time_call
+from .common import fused_off_unless_tpu, time_call
 
 METHODS = [("scale", {}), ("scale_fused", {}), ("adam", {}),
            ("stable_spam", {}), ("muon", {}), ("swan", {}),
@@ -32,13 +32,15 @@ def run(quick: bool = True):
         lambda p: 0.01 * jnp.ones_like(p), params)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     rows = []
-    for name, kw in METHODS:
-        tx = make_optimizer(name, 1e-3, **kw)
-        state = tx.init(params)
-        step = jax.jit(lambda g, s: tx.update(g, s, params))
-        us = time_call(step, grads, state, iters=5)
-        rows.append((f"table7/{arch}/{name}", round(us, 1),
-                     f"params={n/1e6:.0f}M"))
+    # off-TPU, scale_fused would time the Pallas interpreter (see common)
+    with fused_off_unless_tpu():
+        for name, kw in METHODS:
+            tx = make_optimizer(name, 1e-3, **kw)
+            state = tx.init(params)
+            step = jax.jit(lambda g, s: tx.update(g, s, params))
+            us = time_call(step, grads, state, iters=5)
+            rows.append((f"table7/{arch}/{name}", round(us, 1),
+                         f"params={n/1e6:.0f}M"))
     return rows
 
 

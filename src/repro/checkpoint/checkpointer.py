@@ -1,9 +1,15 @@
-"""Fault-tolerant checkpointing: zstd-compressed msgpack shards with atomic
-renames, manifest checksums, latest-k retention, and auto-resume.
+"""Fault-tolerant checkpointing: (optionally zstd-compressed) msgpack shards
+with atomic renames, manifest checksums, latest-k retention, and auto-resume.
 
-Layout:  <dir>/step_<N>/shard_<host>.mpk.zst + manifest.json (+ COMMITTED
-marker written last — a crash mid-save never yields a readable-but-corrupt
-checkpoint, and restore_latest skips uncommitted steps).
+Layout:  <dir>/step_<N>/shard_<host>.mpk.zst (or .mpk when uncompressed)
++ manifest.json (+ COMMITTED marker written last — a crash mid-save never
+yields a readable-but-corrupt checkpoint, and restore_latest skips
+uncommitted steps).
+
+``zstandard`` is an optional dependency: saves default to zstd when the
+module is importable and fall back to uncompressed shards otherwise; a clear
+ImportError is raised only when zstd is explicitly requested (or needed to
+read an existing ``.zst`` shard).
 """
 from __future__ import annotations
 
@@ -17,10 +23,23 @@ from typing import Any, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: only required for zstd compression
+    zstandard = None
 
 PyTree = Any
 _SEP = "/"
+
+
+def _require_zstd(why: str):
+    if zstandard is None:
+        raise ImportError(
+            f"zstd compression requested ({why}) but the optional "
+            "'zstandard' package is not installed; pip install zstandard "
+            "or save with compression='none'")
+    return zstandard
 
 
 def _flatten(tree: PyTree) -> dict:
@@ -41,28 +60,82 @@ def _unpack_array(d: dict) -> np.ndarray:
 
 
 def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
-         n_hosts: int = 1, keep: int = 3) -> str:
-    """Atomically save ``tree`` for ``step``. Returns the checkpoint path."""
+         n_hosts: int = 1, keep: int = 3, compression: str = "auto") -> str:
+    """Atomically save ``tree`` for ``step``. Returns the checkpoint path.
+
+    ``compression``: "auto" (zstd when available, else uncompressed),
+    "zstd" (required; clear error when the module is missing), or "none".
+    """
+    if compression not in ("auto", "zstd", "none"):
+        raise ValueError(f"compression must be auto|zstd|none, got {compression!r}")
+    use_zstd = (compression == "zstd"
+                or (compression == "auto" and zstandard is not None))
     step_dir = os.path.join(directory, f"step_{step:010d}")
     tmp_dir = step_dir + ".tmp"
     os.makedirs(tmp_dir, exist_ok=True)
+    # a crashed earlier save may have left this host's shard (possibly with
+    # a different compression/extension) in the tmp dir; remove only our
+    # own stale files — other hosts may be writing their shards to the same
+    # tmp dir concurrently
+    for name in os.listdir(tmp_dir):
+        if name.startswith(f"shard_{host_id:05d}"):
+            os.remove(os.path.join(tmp_dir, name))
 
     flat = _flatten(tree)
     payload = msgpack.packb({k: _pack_array(v) for k, v in flat.items()},
                             use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
-    shard = os.path.join(tmp_dir, f"shard_{host_id:05d}.mpk.zst")
+    if use_zstd:
+        zstd = _require_zstd("compression='zstd'")
+        comp = zstd.ZstdCompressor(level=3).compress(payload)
+        shard = os.path.join(tmp_dir, f"shard_{host_id:05d}.mpk.zst")
+    else:
+        comp = payload
+        shard = os.path.join(tmp_dir, f"shard_{host_id:05d}.mpk")
     with open(shard + ".part", "wb") as f:
         f.write(comp)
     os.replace(shard + ".part", shard)
 
+    # the manifest is authoritative for restore, so it must list every
+    # host's shard. Merge checksums from (a) hosts that already wrote into
+    # this tmp dir and (b) a step dir another host already committed — and
+    # adopt (b)'s shard files into our tmp so the rename below doesn't
+    # destroy them. Best-effort for shared-filesystem multi-host saves; a
+    # true multi-host deployment wants per-host manifests (see ROADMAP).
+    checksums = {os.path.basename(shard): zlib.crc32(comp)}
+    manifest_path = os.path.join(tmp_dir, "manifest.json")
+    # tmp-dir entries (fresher, in-flight) take precedence over a previously
+    # committed step's
+    for src_dir in (tmp_dir, step_dir):
+        src_manifest = os.path.join(src_dir, "manifest.json")
+        if not os.path.exists(src_manifest):
+            continue
+        try:
+            with open(src_manifest) as f:
+                old = json.load(f).get("checksums", {})
+        except (OSError, ValueError):
+            continue  # partial write from a crashed save; our entry stands
+        for name, crc in old.items():
+            # skip this host's entries: stale tmp files were removed above
+            # and our fresh shard supersedes any committed one
+            if name.startswith(f"shard_{host_id:05d}") or name in checksums:
+                continue
+            if src_dir is step_dir:
+                src_shard = os.path.join(src_dir, name)
+                if not os.path.exists(src_shard):
+                    continue  # manifest lists a shard that never landed
+                # overwrite any same-named tmp file: reaching here means no
+                # tmp manifest vouched for it, so it is debris from a
+                # crashed save — the committed shard matches this CRC
+                shutil.copy2(src_shard, os.path.join(tmp_dir, name))
+            checksums[name] = crc
     manifest = {
         "step": step, "n_hosts": n_hosts,
-        "checksums": {os.path.basename(shard): zlib.crc32(comp)},
+        "compression": "zstd" if use_zstd else "none",
+        "checksums": checksums,
         "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
                    for k, v in flat.items()},
     }
-    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+    with open(manifest_path, "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
         f.write("ok")
@@ -100,17 +173,27 @@ def latest_step(directory: str) -> Optional[int]:
 def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree:
     """Restore ``step`` into the structure/dtypes of ``like``."""
     step_dir = os.path.join(directory, f"step_{step:010d}")
-    shard = os.path.join(step_dir, f"shard_{host_id:05d}.mpk.zst")
-    with open(shard, "rb") as f:
-        comp = f.read()
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
+    # the manifest names the shard this save actually wrote (extension
+    # depends on compression), so it is authoritative over directory listing
+    prefix = f"shard_{host_id:05d}"
+    names = [n for n in manifest["checksums"] if n.startswith(prefix)]
+    if not names:
+        raise IOError(f"no shard for host {host_id} in {step_dir}/manifest.json")
+    shard = os.path.join(step_dir, names[0])
+    with open(shard, "rb") as f:
+        comp = f.read()
     want = zlib.crc32(comp)
-    have = manifest["checksums"].get(os.path.basename(shard))
+    have = manifest["checksums"][names[0]]
     if have != want:
         raise IOError(f"checksum mismatch in {shard}: {have} != {want}")
-    raw = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(comp),
-                          raw=False)
+    if shard.endswith(".zst"):
+        payload = _require_zstd(f"reading {shard}").ZstdDecompressor() \
+            .decompress(comp)
+    else:
+        payload = comp
+    raw = msgpack.unpackb(payload, raw=False)
     flat = {k: _unpack_array(v) for k, v in raw.items()}
 
     from repro.core.labels import path_str
@@ -160,7 +243,8 @@ class AsyncSave:
 
 
 def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
-               n_hosts: int = 1, keep: int = 3) -> AsyncSave:
+               n_hosts: int = 1, keep: int = 3,
+               compression: str = "auto") -> AsyncSave:
     """Checkpoint without blocking the training loop.
 
     Device arrays are snapshotted to host memory synchronously (cheap; the
@@ -179,7 +263,8 @@ def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
             flat_tree = jax.tree_util.tree_unflatten(
                 treedef, list(snapshot.values()))
             handle.path = save(directory, step, flat_tree,
-                               host_id=host_id, n_hosts=n_hosts, keep=keep)
+                               host_id=host_id, n_hosts=n_hosts, keep=keep,
+                               compression=compression)
         except BaseException as e:  # surfaced on wait()
             handle.error = e
 

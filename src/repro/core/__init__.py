@@ -3,8 +3,8 @@ from .api import OPTIMIZER_NAMES, make_optimizer
 from .labels import LabelRules, label_tree, partition_sizes
 from .memory import MemoryReport, memory_report, optimizer_state_elements
 from .normalization import (colnorm, normalize, NORMALIZATIONS,
-                            ns_orthogonalize, rownorm, signnorm,
-                            svd_orthogonalize)
+                            ns_orthogonalize, resolve_larger, rownorm,
+                            signnorm, svd_orthogonalize)
 from .optimizers import adam, muon, normalized_sgd, sgd, stable_spam_adam
 from .compression import (compress, compressed, compression_ratio,
                           decompress)
@@ -19,6 +19,7 @@ __all__ = [
     "OPTIMIZER_NAMES", "make_optimizer", "LabelRules", "label_tree",
     "partition_sizes", "MemoryReport", "memory_report",
     "optimizer_state_elements", "colnorm", "normalize", "NORMALIZATIONS",
+    "resolve_larger",
     "ns_orthogonalize", "rownorm", "signnorm", "svd_orthogonalize",
     "adam", "muon", "normalized_sgd", "sgd", "stable_spam_adam",
     "apollo", "apollo_mini", "fira", "galore", "compress", "compressed",

@@ -111,6 +111,22 @@ NORMALIZATIONS = {
 }
 
 
+def resolve_larger(kind: str, shape) -> str:
+    """Resolve the ``larger`` norm kind (Table 13 row 4: normalize along the
+    larger trailing dim; ties break to ``col``) to ``col``/``row`` by shape.
+
+    The single source of truth for the tie-break — both the jnp path
+    (:mod:`repro.core.scale`) and the kernel dispatch
+    (:mod:`repro.kernels.dispatch`) must route through it, or square
+    matrices could silently take different axes per impl.
+    """
+    if kind == "larger":
+        if len(shape) < 2:
+            raise ValueError(f"norm kind 'larger' needs a matrix, got {shape}")
+        return "col" if shape[-2] >= shape[-1] else "row"
+    return kind
+
+
 def normalize(g: jnp.ndarray, kind: str) -> jnp.ndarray:
     try:
         fn = NORMALIZATIONS[kind]

@@ -9,8 +9,35 @@ Ablation knobs reproduce the paper's Tables 8 and 13:
   * ``momentum_on``: which groups carry momentum (default ("last",)).
   * ``norm_last`` / ``norm_rest``: normalization kind per group
     (Table 13 mixed schemes, incl. "larger" = normalize along larger dim).
-  * ``impl``: "jnp" (reference) or "fused" (Pallas kernels; see
-    repro.kernels) — both produce identical updates (tested).
+
+Implementations (``impl``):
+  * ``"jnp"``   — pure-jnp reference; updates are materialized and applied by
+    ``apply_updates`` (6 HBM passes per matrix: g read twice, normalized g
+    written + read, theta read + written).
+  * ``"fused"`` — matrix updates route through the Pallas kernels behind
+    :mod:`repro.kernels.dispatch` (compiled on TPU, interpret oracle on
+    CPU/GPU). Dispatch coverage: 2-D and stacked 3-D params, arbitrary
+    shapes (remainder tiles masked in-kernel), ``col``/``row``/``larger``
+    norm kinds, f32/bf16 inputs; anything outside that matrix (``sign``/
+    ``ns``/``svd`` kinds, >3-D leaves) falls back to jnp per-leaf.
+
+Both impls produce the same updates (parity-tested) and bitwise-identical
+state treedefs, so checkpoints are interchangeable.
+
+Fused parameter write: both impls also provide ``update_params`` (see
+:class:`repro.core.types.GradientTransformation`), which updates theta
+directly instead of materializing an update tree. Under ``impl="fused"``
+a stateless matrix costs 4 HBM passes per step instead of the unfused 6
+(one grad read for the norm reduction, then an apply stage that touches
+each matrix exactly 3x: theta read, grad read, theta write); momentum
+matrices cost 6 instead of 9 (the exact accounting lives in
+:mod:`repro.kernels.dispatch`). The trainer feature-detects
+``update_params`` and skips the separate ``apply_updates`` pass.
+
+State invariant: ``update`` returns a state with exactly the shapes/dtypes
+``init`` produced (f32 moments, int32 count) — ``lax.scan`` training loops
+and donated buffers rely on this fixed point (regression-tested via
+``jax.eval_shape``).
 """
 from __future__ import annotations
 
@@ -20,7 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from .labels import LabelRules, label_tree
-from .normalization import colnorm, normalize
+from .normalization import normalize, resolve_larger
 from .optimizers import _adam_leaf, _empty, _lr_at, _zeros, muon_lr_scale
 from .types import GradientTransformation, PyTree, Schedule
 
@@ -42,10 +69,7 @@ def _norm_kind_for(label: str, norm_last: str, norm_first: str, norm_rest: str) 
 
 
 def _apply_norm(g: jnp.ndarray, kind: str) -> jnp.ndarray:
-    if kind == "larger":  # Table 13 row 4: normalize along the larger dim
-        # reduce over the larger of the two trailing dims
-        kind = "col" if g.shape[-2] >= g.shape[-1] else "row"
-    return normalize(g, kind)
+    return normalize(g, resolve_larger(kind, g.shape))
 
 
 def scale(
@@ -67,18 +91,21 @@ def scale(
 
     ``lr_scaling=True`` enables the Muon-style per-matrix lr scale the paper
     uses for its 1B run (Appendix C). ``impl="fused"`` routes matrix updates
-    through the Pallas kernels in :mod:`repro.kernels`.
+    through :mod:`repro.kernels.dispatch` (Pallas kernels).
     """
     rules = rules or LabelRules()
     adam_lr = adam_lr if adam_lr is not None else lr
     norm_first = norm_first if norm_first is not None else norm_rest
     momentum_on = tuple(momentum_on)
 
-    if impl == "fused":
-        from repro.kernels.colnorm import ops as _colnorm_ops
-        from repro.kernels.scale_head import ops as _head_ops
+    fused = impl == "fused"
+    if fused:
+        from repro.kernels import dispatch as _kd
     elif impl != "jnp":
         raise ValueError(f"unknown impl {impl!r}")
+
+    def _use_kernel(shape, kind) -> bool:
+        return fused and _kd.supported(shape, kind)
 
     def init(params):
         labels = label_tree(params, rules)
@@ -95,41 +122,80 @@ def scale(
             nu=jax.tree_util.tree_map(mk_nu, labels, params),
         )
 
-    def update(grads, state, params=None):
+    def _split(out):
+        istup = lambda x: isinstance(x, tuple)
+        return tuple(
+            jax.tree_util.tree_map(lambda o, k=k: o[k], out, is_leaf=istup)
+            for k in range(3))
+
+    def _step(grads, state, params):
+        """Shared per-leaf routing for both entry points.
+
+        ``params is None`` -> delta mode: return the update tree (classic
+        ``update`` contract). Otherwise -> write mode: return new params
+        directly (``update_params``). Keeping one copy of the label/kind/
+        kernel branching is what guarantees the two modes cannot drift.
+
+        Updates/applies are rounded through the gradient dtype at the
+        source: a f32 update tree would materialize full-size f32 copies of
+        the biggest (stacked-layer) parameters (dry-run: +27 GB on
+        v3-671B). The jnp write-mode branches replay the delta mode's exact
+        cast chain (round to g.dtype, then to p.dtype on apply), so for
+        ``impl="jnp"`` both modes are bitwise-equal for any grad/param
+        dtype combination. The fused kernel write skips the intermediate
+        g.dtype rounding and applies in full f32 — slightly more precise,
+        within the parity-test tolerance.
+        """
         labels = label_tree(grads, rules)
         count = state.count
         lr_t = _lr_at(lr, count)
         alr_t = _lr_at(adam_lr, count)
 
-        def leaf(lab, g, m, v):
-            # updates are cast back to the gradient dtype at the source: a
-            # f32 update tree would materialize full-size f32 copies of the
-            # biggest (stacked-layer) parameters (dry-run: +27 GB on v3-671B)
+        def emit(u, g, p):
+            # delta mode returns the rounded update; write mode applies it
+            u = u.astype(g.dtype)
+            return u if p is None else p + u.astype(p.dtype)
+
+        def leaf(lab, g, m, v, p):
             if lab == "vector":
                 upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-                return (-alr_t * upd).astype(g.dtype), m, v
+                return emit(-alr_t * upd, g, p), m, v
             gf = g.astype(_f32)
             s = muon_lr_scale(g.shape) if lr_scaling else 1.0
             kind = _norm_kind_for(lab, norm_last, norm_first, norm_rest)
+            lr_eff = lr_t * s
             if lab in momentum_on:
-                if impl == "fused" and kind == "col" and g.ndim == 2:
-                    m, d = _head_ops.momentum_colnorm(m, gf, beta)
-                    return (-lr_t * s * d).astype(g.dtype), m, v
+                if _use_kernel(g.shape, kind):
+                    if p is None:
+                        m, d = _kd.momentum_norm(m, gf, beta, kind)
+                        return emit(-lr_eff * d, g, p), m, v
+                    p_new, m = _kd.momentum_norm_update(p, m, gf, beta,
+                                                        lr_eff, kind)
+                    return p_new, m, v
                 m = beta * m + (1.0 - beta) * gf
-                return (-lr_t * s * _apply_norm(m, kind)).astype(g.dtype), m, v
-            if impl == "fused" and kind == "col" and g.ndim == 2:
-                return (-lr_t * s * _colnorm_ops.colnorm(gf)).astype(g.dtype), m, v
-            return (-lr_t * s * _apply_norm(gf, kind)).astype(g.dtype), m, v
+                return emit(-lr_eff * _apply_norm(m, kind), g, p), m, v
+            if _use_kernel(g.shape, kind):
+                if p is None:
+                    return emit(-lr_eff * _kd.normalize(gf, kind), g, p), m, v
+                return _kd.norm_update(p, gf, lr_eff, kind), m, v
+            return emit(-lr_eff * _apply_norm(gf, kind), g, p), m, v
 
-        out = jax.tree_util.tree_map(leaf, labels, grads, state.mu, state.nu)
-        istup = lambda x: isinstance(x, tuple)
-        return (
-            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
-            ScaleState(
-                count + 1,
-                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
-                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
-            ),
-        )
+        if params is None:
+            out = jax.tree_util.tree_map(
+                lambda lab, g, m, v: leaf(lab, g, m, v, None),
+                labels, grads, state.mu, state.nu)
+        else:
+            out = jax.tree_util.tree_map(leaf, labels, grads, state.mu,
+                                         state.nu, params)
+        result, mu, nu = _split(out)
+        return result, ScaleState(count + 1, mu, nu)
 
-    return GradientTransformation(init, update)
+    def update(grads, state, params=None):
+        del params  # classic contract: deltas are independent of theta
+        return _step(grads, state, None)
+
+    def update_params(grads, state, params):
+        """Fused step: write theta directly (no materialized update tree)."""
+        return _step(grads, state, params)
+
+    return GradientTransformation(init, update, update_params)

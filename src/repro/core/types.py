@@ -8,6 +8,15 @@ A :class:`GradientTransformation` is an ``(init, update)`` pair:
 
 ``updates`` are *deltas* (already negated / scaled by the learning rate where
 applicable), so ``apply_updates`` is a plain tree add.
+
+Optimizers whose hot path benefits from writing parameters in place (one
+theta read + one theta write per step instead of materializing a full-size
+update tree) may additionally provide ``update_params``:
+
+    params, state = tx.update_params(grads, state, params)
+
+The field defaults to ``None``; callers (e.g. the trainer) feature-detect it
+and fall back to the classic ``update`` + ``apply_updates`` sequence.
 """
 from __future__ import annotations
 
@@ -24,6 +33,9 @@ Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
 class GradientTransformation(NamedTuple):
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+    # optional fused path: (grads, state, params) -> (new_params, new_state)
+    update_params: Optional[
+        Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]] = None
 
 
 class EmptyState(NamedTuple):

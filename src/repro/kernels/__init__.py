@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# OPTIONAL layer: custom kernels for the paper's compute hot-spot (the
+# SCALE update). `dispatch` is the single entry point — it owns backend
+# selection (compiled on TPU, interpret oracle elsewhere), the coverage
+# matrix, and jnp-reference fallbacks. The kernel packages each pair a
+# Pallas implementation (<name>.py) with a pure-jnp oracle (ref.py).
+from . import dispatch
+
+__all__ = ["dispatch"]

@@ -1,22 +1,57 @@
-"""Pallas TPU kernels for column-wise gradient normalization.
+"""Pallas TPU kernels for row/column gradient normalization and the fused
+SCALE parameter update.
 
 The SCALE optimizer step is HBM-bandwidth-bound: every parameter matrix and
-its gradient stream through HBM once per step. The fused kernels here avoid
-materializing the normalized gradient:
+its gradient stream through HBM once per step, and the arithmetic per element
+is tiny. These kernels minimize HBM passes; :mod:`repro.kernels.dispatch`
+decides when they run compiled vs. in interpret mode.
 
-  * ``col_sumsq``   — tiled reduction over the input (sublane) dimension,
-    f32 accumulator in VMEM scratch. Grid is (col_tiles, row_tiles) with the
-    row axis innermost, exploiting Pallas TPU's sequential grid execution to
-    accumulate across row tiles and emit once per column tile.
-  * ``colnorm_apply`` / ``update_apply`` — element-wise tiles consuming the
-    (1, n) sums-of-squares; ``update_apply`` fuses the SGD subtraction so
-    theta/g are read once and theta written once (3 HBM passes total versus
-    5 for the unfused jnp sequence).
+Coverage matrix (see ``dispatch.supported``):
+
+  ndim   norm kind          dtype            handling
+  -----  -----------------  ---------------  -------------------------------
+  2      col / row          f32 / bf16       single grid cell per (j, i) tile
+  3      col / row          f32 / bf16       leading grid axis over layers /
+                                             experts (stacked scan params)
+  any    larger             f32 / bf16       resolved to col/row per shape at
+                                             dispatch (shapes are static)
+  any    sign / ns / svd    --               jnp reference (not fused)
+
+Arbitrary (non-tile-divisible) shapes are supported: grids use ``pl.cdiv``
+and kernels mask the remainder rows/cols of the reduction axis with a
+``broadcasted_iota`` predicate, so vocab-size 50257 heads and odd MLP dims
+take the fused path instead of falling back to jnp.
+
+Kernels:
+
+  * ``norm_sumsq``    — tiled sum-of-squares reduction along the reduce axis
+    (rows for ``col``, columns for ``row``), f32 accumulator in VMEM scratch.
+    The reduce axis is the innermost grid dimension, exploiting Pallas TPU's
+    sequential grid execution to accumulate across tiles and emit once per
+    output tile.
+  * ``norm_apply``    — element-wise tiles consuming the sums-of-squares;
+    out = g / (||axis||+eps). One read of g, one write of the output.
+  * ``update_apply``  — fuses the SGD subtraction: theta' = theta -
+    lr * g/(||axis||+eps). theta and g are read once and theta written once.
+
+HBM-pass accounting per matrix parameter: one pass = one full-matrix read
+or write (the per-slice norm vector is ~1/256 of a matrix — noise). For the
+stateless update theta' = theta - lr * g/||g||:
+
+  unfused jnp sequence:   g r (sumsq); g r, gn w (scale);
+                          theta r, gn r, theta' w (apply)        = 6 passes
+  fused (sumsq + update_apply):
+                          g r (sumsq); theta r, g r, theta' w    = 4 passes
+
+i.e. the bandwidth-dominant apply stage touches each matrix exactly 3x
+(theta read, grad read, theta write); the preceding norm reduction re-reads
+g once — a hard floor for col/row norms, which need the full column/row
+sums before any element can be scaled.
 
 Tile sizes default to (256, 256): 256x256xf32 = 256 KiB per operand tile,
 three operands + scratch < 2 MiB, comfortably inside a v5e core's 16 MiB
-VMEM while keeping both dims multiples of the (8, 128) f32 tiling and the
-128-lane VPU/MXU width.
+VMEM while keeping both dims multiples of the (8, 128) f32 / (16, 128) bf16
+tiling and the 128-lane VPU width.
 """
 from __future__ import annotations
 
@@ -30,80 +65,169 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = (256, 256)
 
 
-def _col_sumsq_kernel(g_ref, out_ref, acc_ref, *, n_row_tiles: int):
-    i = pl.program_id(1)  # row tile (innermost)
+def _canon3(x: jnp.ndarray) -> jnp.ndarray:
+    """Canonicalize to (L, m, n); 2-D inputs get a unit layer axis."""
+    if x.ndim == 2:
+        return x[None]
+    if x.ndim == 3:
+        return x
+    raise ValueError(f"fused kernels take 2-D/3-D arrays, got {x.shape}")
+
+
+def _blocks(m: int, n: int, block=DEFAULT_BLOCK):
+    """Clamp the default block to the (padded) array size.
+
+    Sublane dim rounds to 32 (covers f32/bf16/int8 tiling), lane dim to 128,
+    so a single-tile grid over a small or ragged array stays hardware-aligned.
+    """
+    bm = min(block[0], -(-m // 32) * 32)
+    bn = min(block[1], -(-n // 128) * 128)
+    return bm, bn
+
+
+def _red_mask(shape, tile_idx, block_sz, dim, axis_in_tile):
+    """True for positions whose global index along the reduce axis is < dim.
+
+    Remainder tiles are zero-padded via this mask before squaring — Pallas
+    pads out-of-bounds block regions with undefined values (NaN in interpret
+    mode), which would otherwise poison the accumulator.
+    """
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis_in_tile)
+    return tile_idx * block_sz + idx < dim
+
+
+# --------------------------------------------------------------------------
+# norm_sumsq: sum of squares along the reduce axis
+# --------------------------------------------------------------------------
+
+def _sumsq_kernel(g_ref, out_ref, acc_ref, *, n_red_tiles, red_dim, red_block,
+                  red_axis):
+    i = pl.program_id(2)  # reduce-axis tile (innermost)
 
     @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    gf = g_ref[...].astype(jnp.float32)
-    acc_ref[...] += jnp.sum(gf * gf, axis=0, keepdims=True)
+    gf = g_ref[0].astype(jnp.float32)
+    gf = jnp.where(_red_mask(gf.shape, i, red_block, red_dim, red_axis),
+                   gf, 0.0)
+    acc_ref[...] += jnp.sum(gf * gf, axis=red_axis, keepdims=True)
 
-    @pl.when(i == n_row_tiles - 1)
+    @pl.when(i == n_red_tiles - 1)
     def _emit():
-        out_ref[...] = acc_ref[...]
+        out_ref[0] = acc_ref[...]
 
 
-def col_sumsq(g: jnp.ndarray, block=DEFAULT_BLOCK, interpret: bool = True):
-    m, n = g.shape
-    bm, bn = min(block[0], m), min(block[1], n)
-    assert m % bm == 0 and n % bn == 0, (g.shape, block)
-    grid = (n // bn, m // bm)  # columns outer, rows inner (sequential accum)
+def norm_sumsq(g: jnp.ndarray, axis: str = "col", block=DEFAULT_BLOCK,
+               interpret: bool = True) -> jnp.ndarray:
+    """Per-column (axis="col") or per-row (axis="row") sum of squares.
+
+    g (L, m, n) -> (L, 1, n) for col, (L, m, 1) for row; f32.
+    """
+    L, m, n = g.shape
+    bm, bn = _blocks(m, n, block)
+    if axis == "col":  # reduce over rows
+        grid = (L, pl.cdiv(n, bn), pl.cdiv(m, bm))
+        g_map = lambda l, j, i: (l, i, j)
+        out_spec = pl.BlockSpec((1, 1, bn), lambda l, j, i: (l, 0, j))
+        out_shape = jax.ShapeDtypeStruct((L, 1, n), jnp.float32)
+        scratch = pltpu.VMEM((1, bn), jnp.float32)
+        red_dim, red_block, red_axis = m, bm, 0
+    elif axis == "row":  # reduce over columns
+        grid = (L, pl.cdiv(m, bm), pl.cdiv(n, bn))
+        g_map = lambda l, j, i: (l, j, i)
+        out_spec = pl.BlockSpec((1, bm, 1), lambda l, j, i: (l, j, 0))
+        out_shape = jax.ShapeDtypeStruct((L, m, 1), jnp.float32)
+        scratch = pltpu.VMEM((bm, 1), jnp.float32)
+        red_dim, red_block, red_axis = n, bn, 1
+    else:
+        raise ValueError(f"axis must be 'col' or 'row', got {axis!r}")
     return pl.pallas_call(
-        functools.partial(_col_sumsq_kernel, n_row_tiles=grid[1]),
+        functools.partial(_sumsq_kernel, n_red_tiles=grid[2],
+                          red_dim=red_dim, red_block=red_block,
+                          red_axis=red_axis),
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j))],
-        out_specs=pl.BlockSpec((1, bn), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        in_specs=[pl.BlockSpec((1, bm, bn), g_map)],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[scratch],
         interpret=interpret,
     )(g)
 
 
-def _colnorm_apply_kernel(g_ref, ss_ref, out_ref, *, eps: float):
-    norm = jnp.sqrt(ss_ref[...]) + eps
-    out_ref[...] = (g_ref[...].astype(jnp.float32) / norm).astype(out_ref.dtype)
+# --------------------------------------------------------------------------
+# norm_apply / update_apply: element-wise consumers of the sums-of-squares
+# --------------------------------------------------------------------------
+
+def _norm_apply_kernel(g_ref, ss_ref, out_ref, *, eps: float):
+    # ss block is (1, 1, bn) or (1, bm, 1); broadcasting covers both axes.
+    norm = jnp.sqrt(ss_ref[0]) + eps
+    out_ref[0] = (g_ref[0].astype(jnp.float32) / norm).astype(out_ref.dtype)
 
 
-def colnorm_apply(g, ss, block=DEFAULT_BLOCK, eps: float = 1e-8,
-                  interpret: bool = True):
-    m, n = g.shape
-    bm, bn = min(block[0], m), min(block[1], n)
-    grid = (n // bn, m // bm)
+def _ew_specs(L, m, n, bm, bn, axis):
+    """Grid + block specs shared by the element-wise kernels."""
+    grid = (L, pl.cdiv(n, bn), pl.cdiv(m, bm))
+    tile = pl.BlockSpec((1, bm, bn), lambda l, j, i: (l, i, j))
+    if axis == "col":
+        ss = pl.BlockSpec((1, 1, bn), lambda l, j, i: (l, 0, j))
+    else:
+        ss = pl.BlockSpec((1, bm, 1), lambda l, j, i: (l, i, 0))
+    return grid, tile, ss
+
+
+def norm_apply(g, ss, axis: str = "col", block=DEFAULT_BLOCK,
+               eps: float = 1e-8, interpret: bool = True):
+    """g / (sqrt(ss)+eps) with ss broadcast along the reduce axis."""
+    L, m, n = g.shape
+    bm, bn = _blocks(m, n, block)
+    grid, tile, ss_spec = _ew_specs(L, m, n, bm, bn, axis)
     return pl.pallas_call(
-        functools.partial(_colnorm_apply_kernel, eps=eps),
+        functools.partial(_norm_apply_kernel, eps=eps),
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((1, bn), lambda j, i: (0, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), g.dtype),
+        in_specs=[tile, ss_spec],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((L, m, n), g.dtype),
         interpret=interpret,
     )(g, ss)
 
 
-def _update_apply_kernel(theta_ref, g_ref, ss_ref, lr_ref, out_ref, *, eps: float):
-    norm = jnp.sqrt(ss_ref[...]) + eps
-    upd = theta_ref[...].astype(jnp.float32) - \
-        lr_ref[0, 0] * g_ref[...].astype(jnp.float32) / norm
-    out_ref[...] = upd.astype(out_ref.dtype)
+def _update_apply_kernel(theta_ref, g_ref, ss_ref, lr_ref, out_ref,
+                         *, eps: float):
+    norm = jnp.sqrt(ss_ref[0]) + eps
+    upd = theta_ref[0].astype(jnp.float32) - \
+        lr_ref[0, 0] * g_ref[0].astype(jnp.float32) / norm
+    out_ref[0] = upd.astype(out_ref.dtype)
 
 
-def update_apply(theta, g, ss, lr, block=DEFAULT_BLOCK, eps: float = 1e-8,
-                 interpret: bool = True):
-    m, n = theta.shape
-    bm, bn = min(block[0], m), min(block[1], n)
-    grid = (n // bn, m // bm)
+def update_apply(theta, g, ss, lr, axis: str = "col", block=DEFAULT_BLOCK,
+                 eps: float = 1e-8, interpret: bool = True):
+    """theta - lr * g/(sqrt(ss)+eps): the fused SCALE parameter write."""
+    L, m, n = theta.shape
+    bm, bn = _blocks(m, n, block)
+    grid, tile, ss_spec = _ew_specs(L, m, n, bm, bn, axis)
     lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_update_apply_kernel, eps=eps),
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((1, bn), lambda j, i: (0, j)),
-                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+        in_specs=[tile, tile, ss_spec,
+                  pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
                                memory_space=pltpu.SMEM)],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), theta.dtype),
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((L, m, n), theta.dtype),
         interpret=interpret,
     )(theta, g, ss, lr_arr)
+
+
+# --------------------------------------------------------------------------
+# 2-D convenience wrappers (legacy call sites and tests)
+# --------------------------------------------------------------------------
+
+def col_sumsq(g: jnp.ndarray, block=DEFAULT_BLOCK, interpret: bool = True):
+    """Sum of squares per column. g (m, n) -> (1, n), f32."""
+    return norm_sumsq(_canon3(g), "col", block, interpret)[0]
+
+
+def colnorm_apply(g, ss, block=DEFAULT_BLOCK, eps: float = 1e-8,
+                  interpret: bool = True):
+    return norm_apply(_canon3(g), _canon3(ss), "col", block, eps, interpret)[0]

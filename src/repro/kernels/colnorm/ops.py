@@ -1,47 +1,22 @@
-"""Jitted wrappers for the column-norm Pallas kernels.
+"""Column-norm entry points, routed through :mod:`repro.kernels.dispatch`.
 
-Falls back to the pure-jnp oracle when a shape cannot be tiled (non-128-
-aligned dims, or >2-D stacked parameters, where we vmap the oracle).
+Kept as thin aliases for existing call sites; new code should import
+``repro.kernels.dispatch`` directly, which owns backend selection
+(compiled on TPU / interpret elsewhere) and the coverage fallbacks.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from . import colnorm as K
-from . import ref
+from .. import dispatch as _d
 
 
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
-
-
-def _tileable(shape) -> bool:
-    if len(shape) != 2:
-        return False
-    m, n = shape
-    return m % min(K.DEFAULT_BLOCK[0], m) == 0 and \
-        n % min(K.DEFAULT_BLOCK[1], n) == 0 and m >= 8 and n >= 128
-
-
-@functools.partial(jax.jit, static_argnames=("eps",))
 def colnorm(g: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
-    """Column-normalized gradient via the Pallas kernels."""
-    if not _tileable(g.shape):
-        return ref.colnorm(g, eps)
-    interp = not _on_tpu()
-    ss = K.col_sumsq(g, interpret=interp)
-    return K.colnorm_apply(g, ss, eps=eps, interpret=interp)
+    """Column-normalized gradient via the fused kernels."""
+    return _d.normalize(g, "col", eps)
 
 
-@functools.partial(jax.jit, static_argnames=("eps",))
 def colnorm_update(theta: jnp.ndarray, g: jnp.ndarray, lr,
                    eps: float = 1e-8) -> jnp.ndarray:
     """Fused SCALE matrix update: theta - lr * colnorm(g)."""
-    if not _tileable(theta.shape):
-        return ref.colnorm_update(theta, g, lr, eps)
-    interp = not _on_tpu()
-    ss = K.col_sumsq(g, interpret=interp)
-    return K.update_apply(theta, g, ss, lr, eps=eps, interpret=interp)
+    return _d.norm_update(theta, g, lr, "col", eps)

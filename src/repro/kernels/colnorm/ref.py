@@ -1,27 +1,50 @@
-"""Pure-jnp oracles for the column-norm kernels."""
+"""Pure-jnp oracles for the row/column-norm kernels.
+
+``axis="col"`` reduces over rows (axis=-2, per output unit); ``axis="row"``
+reduces over columns (axis=-1). Oracles accept 2-D or stacked 3-D inputs.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 EPS = 1e-8
 
+_RED = {"col": -2, "row": -1}
+
+
+def norm_sumsq(g: jnp.ndarray, axis: str = "col") -> jnp.ndarray:
+    """Sum of squares along the reduce axis (f32, keepdims)."""
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf, axis=_RED[axis], keepdims=True)
+
+
+def normalize(g: jnp.ndarray, axis: str = "col",
+              eps: float = EPS) -> jnp.ndarray:
+    """g / (||slice||_2 + eps) along the reduce axis."""
+    gf = g.astype(jnp.float32)
+    norms = jnp.sqrt(norm_sumsq(g, axis))
+    return (gf / (norms + eps)).astype(g.dtype)
+
+
+def norm_update(theta: jnp.ndarray, g: jnp.ndarray, lr,
+                axis: str = "col", eps: float = EPS) -> jnp.ndarray:
+    """theta - lr * normalize(g)  (the SCALE matrix update)."""
+    return (theta.astype(jnp.float32)
+            - jnp.asarray(lr, jnp.float32)
+            * normalize(g, axis, eps).astype(jnp.float32)
+            ).astype(theta.dtype)
+
+
+# Legacy column-wise names (tests / older call sites).
 
 def col_sumsq(g: jnp.ndarray) -> jnp.ndarray:
-    """Sum of squares per column (f32). g (m, n) -> (1, n)."""
-    gf = g.astype(jnp.float32)
-    return jnp.sum(gf * gf, axis=0, keepdims=True)
+    return norm_sumsq(g, "col")
 
 
 def colnorm(g: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
-    """g / (||col||_2 + eps), per column."""
-    gf = g.astype(jnp.float32)
-    norms = jnp.sqrt(col_sumsq(g))
-    return (gf / (norms + eps)).astype(g.dtype)
+    return normalize(g, "col", eps)
 
 
 def colnorm_update(theta: jnp.ndarray, g: jnp.ndarray, lr,
                    eps: float = EPS) -> jnp.ndarray:
-    """theta - lr * colnorm(g)  (the SCALE matrix update)."""
-    return (theta.astype(jnp.float32)
-            - jnp.asarray(lr, jnp.float32) * colnorm(g).astype(jnp.float32)
-            ).astype(theta.dtype)
+    return norm_update(theta, g, lr, "col", eps)

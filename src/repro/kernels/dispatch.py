@@ -1,0 +1,183 @@
+"""Backend-aware dispatch for the fused optimizer-update kernels.
+
+This is the single place that decides, per (op, shape, norm kind), whether a
+SCALE update runs through the Pallas kernels and in which mode:
+
+  * on TPU the kernels run **compiled** (the real fused, 3-HBM-pass path);
+  * on CPU/GPU they run in **interpret** mode, which executes the same
+    kernel bodies through the Pallas interpreter — a slow but exact oracle
+    that keeps parity tests meaningful on any machine. The interpreter is
+    a correctness tool, not a performance path: for actual off-TPU
+    *training* with ``impl="fused"``, set ``REPRO_FUSED=off`` to take the
+    compiled-XLA jnp path (the benchmarks do this automatically);
+  * shapes/kinds outside the coverage matrix fall back to the jnp reference.
+
+Coverage matrix (``supported``): ndim in {2, 3} x kind in {col, row, larger}
+x any dtype (math is f32 internally) x arbitrary shapes (remainder tiles are
+masked inside the kernels). ``larger`` resolves to col/row per shape at trace
+time. sign/ns/svd norms and >3-D params are not fused.
+
+The ``REPRO_FUSED`` environment variable overrides the mode: ``auto``
+(default), ``interpret``, ``compiled``, or ``off`` (always use the jnp
+reference — an escape hatch if a backend miscompiles). It is read at trace
+time and jit caches are not keyed on it, so set it before the first
+training step; changing it mid-process does not retrace already-compiled
+shapes.
+
+Entry points (all jitted, scalar lr/beta may be traced schedule outputs).
+HBM passes count every full-matrix read/write, jnp-path counts in
+parentheses; the per-slice norm vector is negligible (see the accounting
+note in :mod:`repro.kernels.colnorm.colnorm`):
+
+  ========================  =======================================  ======
+  op                        computes                                 passes
+  ========================  =======================================  ======
+  ``normalize``             g / (||slice|| + eps)                    3  (4)
+  ``norm_update``           theta - lr * normalize(g)                4  (6)
+  ``momentum_norm``         m' = EMA(m, g); (m', normalize(m'))      5  (6)
+  ``momentum_norm_update``  m' = EMA(m, g); theta - lr*normalize(m') 6  (9)
+  ========================  =======================================  ======
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .colnorm import colnorm as _ck
+from .colnorm import ref as _cref
+from .colnorm.colnorm import _canon3 as _c3
+from .scale_head import ref as _href
+from .scale_head import scale_head as _hk
+
+FUSED_KINDS = ("col", "row", "larger")
+FUSED_NDIMS = (2, 3)
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_FUSED", "auto")
+    if m not in ("auto", "interpret", "compiled", "off"):
+        raise ValueError(f"REPRO_FUSED must be auto|interpret|compiled|off, got {m!r}")
+    return m
+
+
+def backend() -> str:
+    return jax.devices()[0].platform
+
+
+def use_interpret() -> bool:
+    """Compiled on TPU, interpret oracle elsewhere (unless overridden)."""
+    mode = _mode()
+    if mode == "interpret":
+        return True
+    if mode == "compiled":
+        return False
+    return backend() != "tpu"
+
+
+def resolve_kind(kind: str, shape) -> str:
+    """Resolve ``larger`` to col/row by shape (Table 13 row 4; static).
+
+    Delegates to :func:`repro.core.normalization.resolve_larger` so the
+    jnp impl and the kernel dispatch share one tie-break for square shapes.
+    """
+    from repro.core.normalization import resolve_larger
+    return resolve_larger(kind, shape)
+
+
+def _ref_norm(g: jnp.ndarray, kind: str, eps: float) -> jnp.ndarray:
+    """jnp fallback for any norm kind (col/row honor eps; others delegate
+    to repro.core.normalization, whose kinds have no eps knob)."""
+    kind = resolve_kind(kind, g.shape)
+    if kind in ("col", "row"):
+        return _cref.normalize(g, kind, eps)
+    from repro.core.normalization import normalize as _core_normalize
+    return _core_normalize(g, kind)
+
+
+def supported(shape, kind: str) -> bool:
+    """True when (shape, kind) is covered by the fused kernels."""
+    if _mode() == "off":
+        return False
+    if len(shape) not in FUSED_NDIMS or kind not in FUSED_KINDS:
+        return False
+    return all(d >= 1 for d in shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps"))
+def normalize(g: jnp.ndarray, kind: str = "col",
+              eps: float = 1e-8) -> jnp.ndarray:
+    """Fused g / (||slice||+eps); falls back to the jnp oracle off-matrix."""
+    if not supported(g.shape, kind):
+        return _ref_norm(g, kind, eps)
+    axis = resolve_kind(kind, g.shape)
+    interp = use_interpret()
+    g3 = _c3(g)
+    ss = _ck.norm_sumsq(g3, axis, interpret=interp)
+    return _ck.norm_apply(g3, ss, axis, eps=eps,
+                          interpret=interp).reshape(g.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps"))
+def norm_update(theta: jnp.ndarray, g: jnp.ndarray, lr, kind: str = "col",
+                eps: float = 1e-8) -> jnp.ndarray:
+    """Fused theta - lr*normalize(g); 3-pass apply stage (th r, g r, th w)."""
+    if not supported(theta.shape, kind):
+        return (theta.astype(jnp.float32)
+                - jnp.asarray(lr, jnp.float32)
+                * _ref_norm(g, kind, eps).astype(jnp.float32)
+                ).astype(theta.dtype)
+    axis = resolve_kind(kind, theta.shape)
+    interp = use_interpret()
+    t3, g3 = _c3(theta), _c3(g)
+    ss = _ck.norm_sumsq(g3, axis, interpret=interp)
+    return _ck.update_apply(t3, g3, ss, lr, axis, eps=eps,
+                            interpret=interp).reshape(theta.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps"))
+def momentum_norm(m: jnp.ndarray, g: jnp.ndarray, beta, kind: str = "col",
+                  eps: float = 1e-8):
+    """(m', normalize(m')) with the EMA and sumsq fused into one kernel."""
+    if not supported(m.shape, kind):
+        m_new = (jnp.asarray(beta, jnp.float32) * m.astype(jnp.float32)
+                 + (1.0 - jnp.asarray(beta, jnp.float32))
+                 * g.astype(jnp.float32))
+        return m_new, _ref_norm(m_new, kind, eps)
+    axis = resolve_kind(kind, m.shape)
+    interp = use_interpret()
+    m3, g3 = _c3(m), _c3(g)
+    m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp)
+    d = _ck.norm_apply(m_new, ss, axis, eps=eps, interpret=interp)
+    return m_new.reshape(m.shape), d.reshape(m.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps"))
+def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                         beta, lr, kind: str = "col", eps: float = 1e-8):
+    """Fully fused stateful step: (theta', m') in two kernel launches."""
+    if not supported(theta.shape, kind):
+        m_new, d = momentum_norm(m, g, beta, kind, eps)
+        theta_new = (theta.astype(jnp.float32)
+                     - jnp.asarray(lr, jnp.float32) * d.astype(jnp.float32)
+                     ).astype(theta.dtype)
+        return theta_new, m_new
+    axis = resolve_kind(kind, theta.shape)
+    interp = use_interpret()
+    t3, m3, g3 = _c3(theta), _c3(m), _c3(g)
+    m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp)
+    theta_new = _hk.head_update_apply(t3, m_new, ss, lr, axis, eps=eps,
+                                      interpret=interp)
+    return theta_new.reshape(theta.shape), m_new.reshape(m.shape)
+
+
+# Introspection: op name -> (fused entry point, jnp reference). Tests iterate
+# this to keep the parity matrix and the dispatch table in sync.
+REGISTRY = {
+    "normalize": (normalize, _cref.normalize),
+    "norm_update": (norm_update, _cref.norm_update),
+    "momentum_norm": (momentum_norm, _href.momentum_norm),
+    "momentum_norm_update": (momentum_norm_update, _href.momentum_norm_update),
+}

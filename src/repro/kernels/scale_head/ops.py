@@ -1,45 +1,17 @@
-"""Jitted wrappers for the fused LM-head SCALE update."""
+"""Fused momentum (LM-head) entry points, routed through
+:mod:`repro.kernels.dispatch` (which owns backend selection and coverage
+fallbacks). Kept as thin aliases for existing call sites.
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from . import ref
-from . import scale_head as K
+from .. import dispatch as _d
 
 
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
-
-
-def _tileable(shape) -> bool:
-    if len(shape) != 2:
-        return False
-    m, n = shape
-    return m % min(K.DEFAULT_BLOCK[0], m) == 0 and \
-        n % min(K.DEFAULT_BLOCK[1], n) == 0 and m >= 8 and n >= 128
-
-
-@functools.partial(jax.jit, static_argnames=("eps",))
 def momentum_colnorm(m, g, beta, eps: float = 1e-8):
-    """(m_new, colnorm(m_new)) via the fused kernel."""
-    if not _tileable(m.shape):
-        return ref.momentum_colnorm(m, g, beta, eps)
-    interp = not _on_tpu()
-    m_new, ss = K.momentum_sumsq(m, g, beta, interpret=interp)
-    d = (m_new / (jnp.sqrt(ss) + eps))
-    return m_new, d
+    """(m', colnorm(m')) via the fused kernel."""
+    return _d.momentum_norm(m, g, beta, "col", eps)
 
 
-@functools.partial(jax.jit, static_argnames=("eps",))
 def head_update(theta, m, g, beta, lr, eps: float = 1e-8):
-    """Fully fused LM-head step. Returns (theta_new, m_new)."""
-    if not _tileable(theta.shape):
-        return ref.head_update(theta, m, g, beta, lr, eps)
-    interp = not _on_tpu()
-    m_new, ss = K.momentum_sumsq(m, g, beta, interpret=interp)
-    theta_new = K.head_update_apply(theta, m_new, ss, lr, eps=eps,
-                                    interpret=interp)
-    return theta_new, m_new
+    """Fully fused LM-head step. Returns (theta', m')."""
+    return _d.momentum_norm_update(theta, m, g, beta, lr, "col", eps)

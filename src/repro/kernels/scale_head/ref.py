@@ -1,24 +1,36 @@
-"""Pure-jnp oracle for the fused LM-head momentum + column-norm update."""
+"""Pure-jnp oracle for the fused momentum + norm (LM-head) update."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 EPS = 1e-8
 
+_RED = {"col": -2, "row": -1}
 
-def momentum_colnorm(m: jnp.ndarray, g: jnp.ndarray, beta,
-                     eps: float = EPS):
-    """m_new = beta*m + (1-beta)*g ; d = colnorm(m_new). Returns (m_new, d)."""
+
+def momentum_norm(m: jnp.ndarray, g: jnp.ndarray, beta, axis: str = "col",
+                  eps: float = EPS):
+    """m' = beta*m + (1-beta)*g ; d = m'/(||m'||+eps). Returns (m', d)."""
     beta = jnp.asarray(beta, jnp.float32)
     m_new = beta * m.astype(jnp.float32) + (1.0 - beta) * g.astype(jnp.float32)
-    norms = jnp.sqrt(jnp.sum(m_new * m_new, axis=0, keepdims=True))
+    norms = jnp.sqrt(jnp.sum(m_new * m_new, axis=_RED[axis], keepdims=True))
     return m_new, m_new / (norms + eps)
 
 
-def head_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray, beta, lr,
-                eps: float = EPS):
-    """Full fused head step. Returns (theta_new, m_new)."""
-    m_new, d = momentum_colnorm(m, g, beta, eps)
+def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                         beta, lr, axis: str = "col", eps: float = EPS):
+    """Full fused momentum step. Returns (theta', m')."""
+    m_new, d = momentum_norm(m, g, beta, axis, eps)
     theta_new = (theta.astype(jnp.float32)
                  - jnp.asarray(lr, jnp.float32) * d).astype(theta.dtype)
     return theta_new, m_new
+
+
+# Legacy column-wise names (tests / older call sites).
+
+def momentum_colnorm(m, g, beta, eps: float = EPS):
+    return momentum_norm(m, g, beta, "col", eps)
+
+
+def head_update(theta, m, g, beta, lr, eps: float = EPS):
+    return momentum_norm_update(theta, m, g, beta, lr, "col", eps)

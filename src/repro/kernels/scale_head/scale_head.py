@@ -1,18 +1,23 @@
-"""Pallas TPU kernels for the fused SCALE LM-head update.
+"""Pallas TPU kernels for the fused SCALE momentum (LM-head) update.
 
-The LM head is the only stateful matrix in SCALE (first-order momentum).
-Its step streams four HBM tensors (theta, m, g -> theta', m'); the naive
-sequence (EMA, colnorm, axpy) makes ~7 passes. Fused here into two:
+Momentum-carrying matrices (by default only the LM head) are the stateful
+part of SCALE. The naive sequence (EMA, norm, axpy) makes ~7 HBM passes over
+theta/m/g; fused here into two kernels:
 
   * ``momentum_sumsq`` — writes m' = beta*m + (1-beta)*g tile-by-tile while
-    accumulating sum(m'^2) per column in VMEM scratch (rows innermost grid
-    axis -> sequential accumulation), emitting (1, n) sums once per column
-    tile. One read of m and g, one write of m'.
-  * ``head_update_apply`` — theta' = theta - lr * m'/(||col m'||+eps):
-    one read of theta and m', one write of theta'.
+    accumulating sum(m'^2) along the reduce axis in VMEM scratch (reduce
+    axis innermost in the grid -> sequential accumulation), emitting the
+    sums-of-squares once per output tile. One read of m and g, one write
+    of m'.
+  * the apply step reuses :func:`repro.kernels.colnorm.colnorm.update_apply`
+    (theta' = theta - lr * m'/(||m'||+eps)): one read of theta and m', one
+    write of theta'.
 
-The vocab dimension of an LM head is always a multiple of 128 (configs pad),
-so tiles stay MXU/VPU aligned.
+Same coverage as the colnorm kernels: 2-D or stacked 3-D params, ``col`` or
+``row`` reduce axis, arbitrary (non-tile-divisible) shapes via cdiv grids +
+iota remainder masks. Remainder masking matters twice here: padded lanes of
+m'/g are undefined, so they are excluded from the accumulator (the m' write
+itself is clipped by Pallas).
 """
 from __future__ import annotations
 
@@ -23,72 +28,76 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_BLOCK = (256, 256)
+from ..colnorm.colnorm import (DEFAULT_BLOCK, _blocks, _canon3, _red_mask,
+                               update_apply)
+
+__all__ = ["DEFAULT_BLOCK", "momentum_sumsq", "head_update_apply"]
 
 
 def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, m_out_ref, ss_ref, acc_ref,
-                           *, n_row_tiles: int):
-    i = pl.program_id(1)
+                           *, n_red_tiles, red_dim, red_block, red_axis):
+    i = pl.program_id(2)
 
     @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     beta = beta_ref[0, 0]
-    m_new = beta * m_ref[...].astype(jnp.float32) + \
-        (1.0 - beta) * g_ref[...].astype(jnp.float32)
-    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
-    acc_ref[...] += jnp.sum(m_new * m_new, axis=0, keepdims=True)
+    m_new = beta * m_ref[0].astype(jnp.float32) + \
+        (1.0 - beta) * g_ref[0].astype(jnp.float32)
+    m_out_ref[0] = m_new.astype(m_out_ref.dtype)
+    masked = jnp.where(
+        _red_mask(m_new.shape, i, red_block, red_dim, red_axis), m_new, 0.0)
+    acc_ref[...] += jnp.sum(masked * masked, axis=red_axis, keepdims=True)
 
-    @pl.when(i == n_row_tiles - 1)
+    @pl.when(i == n_red_tiles - 1)
     def _emit():
-        ss_ref[...] = acc_ref[...]
+        ss_ref[0] = acc_ref[...]
 
 
-def momentum_sumsq(m, g, beta, block=DEFAULT_BLOCK, interpret: bool = True):
-    mm, n = m.shape
-    bm, bn = min(block[0], mm), min(block[1], n)
-    assert mm % bm == 0 and n % bn == 0, (m.shape, block)
-    grid = (n // bn, mm // bm)
+def momentum_sumsq(m, g, beta, axis: str = "col", block=DEFAULT_BLOCK,
+                   interpret: bool = True):
+    """(m', ss) where m' = beta*m + (1-beta)*g, ss = sumsq(m') along axis.
+
+    m, g: (L, mm, n). Returns m' (L, mm, n) f32 and ss (L, 1, n) for col /
+    (L, mm, 1) for row, f32.
+    """
+    L, mm, n = m.shape
+    bm, bn = _blocks(mm, n, block)
+    tile = pl.BlockSpec((1, bm, bn), lambda l, j, i: (l, i, j))
+    if axis == "col":
+        grid = (L, pl.cdiv(n, bn), pl.cdiv(mm, bm))
+        ss_spec = pl.BlockSpec((1, 1, bn), lambda l, j, i: (l, 0, j))
+        ss_shape = jax.ShapeDtypeStruct((L, 1, n), jnp.float32)
+        scratch = pltpu.VMEM((1, bn), jnp.float32)
+        red_dim, red_block, red_axis = mm, bm, 0
+    elif axis == "row":
+        grid = (L, pl.cdiv(mm, bm), pl.cdiv(n, bn))
+        tile = pl.BlockSpec((1, bm, bn), lambda l, j, i: (l, j, i))
+        ss_spec = pl.BlockSpec((1, bm, 1), lambda l, j, i: (l, j, 0))
+        ss_shape = jax.ShapeDtypeStruct((L, mm, 1), jnp.float32)
+        scratch = pltpu.VMEM((bm, 1), jnp.float32)
+        red_dim, red_block, red_axis = n, bn, 1
+    else:
+        raise ValueError(f"axis must be 'col' or 'row', got {axis!r}")
     beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
-        functools.partial(_momentum_sumsq_kernel, n_row_tiles=grid[1]),
+        functools.partial(_momentum_sumsq_kernel, n_red_tiles=grid[2],
+                          red_dim=red_dim, red_block=red_block,
+                          red_axis=red_axis),
         grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+        in_specs=[tile, tile,
+                  pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
                                memory_space=pltpu.SMEM)],
-        out_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                   pl.BlockSpec((1, bn), lambda j, i: (0, j))],
-        out_shape=[jax.ShapeDtypeStruct((mm, n), jnp.float32),
-                   jax.ShapeDtypeStruct((1, n), jnp.float32)],
-        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        out_specs=[tile, ss_spec],
+        out_shape=[jax.ShapeDtypeStruct((L, mm, n), jnp.float32), ss_shape],
+        scratch_shapes=[scratch],
         interpret=interpret,
     )(m, g, beta_arr)
 
 
-def _head_update_kernel(theta_ref, m_ref, ss_ref, lr_ref, out_ref, *, eps: float):
-    norm = jnp.sqrt(ss_ref[...]) + eps
-    upd = theta_ref[...].astype(jnp.float32) - \
-        lr_ref[0, 0] * m_ref[...].astype(jnp.float32) / norm
-    out_ref[...] = upd.astype(out_ref.dtype)
-
-
-def head_update_apply(theta, m_new, ss, lr, block=DEFAULT_BLOCK,
-                      eps: float = 1e-8, interpret: bool = True):
-    mm, n = theta.shape
-    bm, bn = min(block[0], mm), min(block[1], n)
-    grid = (n // bn, mm // bm)
-    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
-    return pl.pallas_call(
-        functools.partial(_head_update_kernel, eps=eps),
-        grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-                  pl.BlockSpec((1, bn), lambda j, i: (0, j)),
-                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
-                               memory_space=pltpu.SMEM)],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mm, n), theta.dtype),
-        interpret=interpret,
-    )(theta, m_new, ss, lr_arr)
+def head_update_apply(theta, m_new, ss, lr, axis: str = "col",
+                      block=DEFAULT_BLOCK, eps: float = 1e-8,
+                      interpret: bool = True):
+    """theta - lr * m'/(sqrt(ss)+eps); shares the colnorm apply kernel."""
+    return update_apply(theta, m_new, ss, lr, axis, block, eps, interpret)

@@ -29,17 +29,34 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                     clip_norm: float = 0.0, aux_coef: float = 0.01,
                     rules: Optional[Rules] = None,
                     accum_dtype: str = "float32",
-                    norm_metrics: bool = True):
+                    norm_metrics: bool = True,
+                    fused_apply: Optional[bool] = None):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
     ``grad_accum > 1`` splits the batch into microbatches along axis 0 and
     accumulates gradients via ``lax.scan`` (bounded activation memory, the
-    standard large-scale recipe). ``accum_dtype`` controls the accumulator
-    precision — f32 by default; bf16 halves the accumulator HBM footprint
-    for the largest models (dry-run default for >300B params).
+    standard large-scale recipe); per-microbatch auxiliary metrics (MoE
+    aux-loss, token weight) are averaged alongside the loss. ``accum_dtype``
+    controls the accumulator precision — f32 by default; bf16 halves the
+    accumulator HBM footprint for the largest models (dry-run default for
+    >300B params).
+
+    ``fused_apply`` selects the optimizer's fused parameter write
+    (``tx.update_params``: theta is read and written once, no materialized
+    update tree). ``None`` (default) uses it whenever the optimizer provides
+    one; ``True`` requires it; ``False`` forces the classic ``update`` +
+    ``apply_updates`` sequence. Under the fused path the ``update_norm``
+    metric is recovered from the old/new parameter diff, which re-reads
+    both param trees — set ``norm_metrics=False`` to hold the fused path
+    to its minimal HBM-pass count.
     """
     rules = rules or Rules(cfg.rule_overrides)
     acc_dt = jnp.float32 if accum_dtype == "float32" else jnp.bfloat16
+    if fused_apply is None:
+        fused_apply = tx.update_params is not None
+    elif fused_apply and tx.update_params is None:
+        raise ValueError("fused_apply=True but the optimizer has no "
+                         "update_params (fused parameter write)")
 
     def loss_of(params, mb):
         return loss_fn(params, cfg, mb, aux_coef=aux_coef, rules=rules)
@@ -58,18 +75,23 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
 
         def body(carry, mb):
             acc, loss_acc = carry
-            (loss, _), grads = grad_fn(params, mb)
+            (loss, metrics), grads = grad_fn(params, mb)
             acc = jax.tree_util.tree_map(
                 lambda a, g: a + g.astype(acc_dt), acc, grads)
-            return (acc, loss_acc + loss), None
+            # metrics (aux-loss, token weight, ...) are scalars: stack them
+            # as scan outputs and average after — dropping them here loses
+            # the MoE aux-loss signal whenever grad_accum > 1
+            return (acc, loss_acc + loss), metrics
 
         zeros = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, acc_dt), params)
-        (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
-                                           micro)
+        (gsum, loss_sum), metrics_stack = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
         grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
         loss = loss_sum / grad_accum
-        return loss, {"loss": loss}, grads
+        metrics = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x, axis=0), metrics_stack)
+        return loss, metrics, grads
 
     def train_step(state: TrainState, batch: dict):
         loss, metrics, grads = compute_grads(state.params, batch)
@@ -80,10 +102,18 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
         if clip_norm > 0:
             scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
             grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
-        updates, opt_state = tx.update(grads, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
-        if norm_metrics:
-            out_metrics["update_norm"] = global_norm(updates)
+        if fused_apply:
+            params, opt_state = tx.update_params(grads, state.opt_state,
+                                                 state.params)
+            if norm_metrics:
+                out_metrics["update_norm"] = global_norm(
+                    jax.tree_util.tree_map(lambda a, b: a - b,
+                                           params, state.params))
+        else:
+            updates, opt_state = tx.update(grads, state.opt_state, state.params)
+            params = apply_updates(state.params, updates)
+            if norm_metrics:
+                out_metrics["update_norm"] = global_norm(updates)
         out_metrics.update({k: v for k, v in metrics.items() if k != "loss"})
         return TrainState(state.step + 1, params, opt_state), out_metrics
 

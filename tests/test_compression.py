@@ -3,6 +3,9 @@ int8 compression ~free for SCALE but biased for Adam."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import colnorm, make_optimizer

@@ -151,3 +151,85 @@ def test_schedule_warmup_cosine():
     assert abs(float(s(10)) - 1.0) < 1e-6
     assert float(s(100)) <= 0.12
     assert float(s(50)) < 1.0
+
+
+@pytest.mark.parametrize("name", OPTIMIZER_NAMES)
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_state_is_eval_shape_fixed_point(name, gdtype):
+    """update() must return states with exactly init()'s shapes/dtypes.
+
+    A drifting state dtype (e.g. a momentum buffer silently promoted or
+    demoted) breaks lax.scan training loops and donated-buffer updates:
+    jit caches key on the state aval, so step 2 would recompile or error.
+    Regression test for the mu-dtype audit; also covers bf16 gradients
+    (mixed-precision accumulators hand those to the optimizer).
+    """
+    params = make_params()
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, gdtype if p.ndim > 1 else p.dtype),
+        params)
+    tx = make_optimizer(name, 1e-3)
+    s0 = jax.eval_shape(tx.init, params)
+    s1 = jax.eval_shape(lambda g, s, p: tx.update(g, s, p)[1],
+                        grads, s0, params)
+    assert (jax.tree_util.tree_structure(s0)
+            == jax.tree_util.tree_structure(s1))
+    for a, b in zip(jax.tree_util.tree_leaves(s0),
+                    jax.tree_util.tree_leaves(s1)):
+        assert a.shape == b.shape and a.dtype == b.dtype, (name, a, b)
+        assert a.weak_type == b.weak_type, (name, a, b)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "fused"])
+def test_scale_update_params_state_fixed_point(impl):
+    """The fused parameter write preserves both param and state avals."""
+    params = make_params()
+    grads = make_grads(params)
+    tx = make_optimizer("scale", 1e-3, impl=impl)
+    s0 = jax.eval_shape(tx.init, params)
+    p1, s1 = jax.eval_shape(lambda g, s, p: tx.update_params(g, s, p),
+                            grads, s0, params)
+    assert (jax.tree_util.tree_structure(s0)
+            == jax.tree_util.tree_structure(s1))
+    for a, b in zip(jax.tree_util.tree_leaves(s0),
+                    jax.tree_util.tree_leaves(s1)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    for a, b in zip(jax.tree_util.tree_leaves(jax.eval_shape(lambda p: p, params)),
+                    jax.tree_util.tree_leaves(p1)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("impl", ["jnp", "fused"])
+def test_update_params_matches_classic_path_bf16_grads(impl):
+    """update_params vs update+apply_updates under mixed precision.
+
+    With bf16 grads and f32 params the classic path rounds each update to
+    the grad dtype before applying. The jnp write-mode branches replay that
+    exact cast chain (bitwise equality — auto-switching the trainer onto
+    update_params must not change an impl='jnp' run's trajectory). The
+    fused kernel write applies in full f32 without the intermediate g.dtype
+    rounding, so it matches within the parity tolerance instead.
+    """
+    params = make_params()
+    grads = jax.tree_util.tree_map(
+        lambda p: (0.1 * jnp.ones_like(p) + 0.01 * p).astype(
+            jnp.bfloat16 if p.ndim > 1 else p.dtype), params)
+    tx = make_optimizer("scale", 1e-2, impl=impl)
+    sa, sb = tx.init(params), tx.init(params)
+    pa = pb = params
+    for _ in range(5):
+        ua, sa = tx.update(grads, sa, pa)
+        pa = apply_updates(pa, ua)
+        pb, sb = tx.update_params(grads, sb, pb)
+    for x, y in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        if impl == "jnp":
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32), atol=1e-4)
+    for x, y in zip(jax.tree_util.tree_leaves(sa),
+                    jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-5)

@@ -71,6 +71,35 @@ def test_grad_accum_equivalence(tiny):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
 
 
+def test_grad_accum_keeps_aux_metrics():
+    """MoE aux-loss metrics must survive microbatch accumulation.
+
+    The scan body used to discard the aux dict, so `aux` vanished from the
+    metrics whenever grad_accum > 1; it is now averaged across microbatches.
+    """
+    cfg = tiny_cfg("moe", family="moe", n_experts=4, top_k=2, moe_d_ff=64,
+                   capacity_factor=2.0)
+    tx = make_optimizer("scale", 3e-3)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ds = make_dataset(cfg, seq_len=32, global_batch=8, seed=0)
+    batch = ds.host_batch_at(0)
+    out = {}
+    for accum in (1, 2):
+        step_fn = jax.jit(make_train_step(cfg, tx, grad_accum=accum,
+                                          clip_norm=1.0))
+        _, metrics = step_fn(init_state(params, tx), batch)
+        assert "aux" in metrics, f"aux metric dropped at grad_accum={accum}"
+        # scale provides update_params (fused apply); the metric must survive
+        assert "update_norm" in metrics
+        out[accum] = metrics
+    # aux (load-balancing) loss is nonlinear in per-microbatch routing
+    # statistics, so halves differ slightly from the full batch
+    np.testing.assert_allclose(float(out[1]["aux"]), float(out[2]["aux"]),
+                               atol=5e-3)
+    np.testing.assert_allclose(float(out[1]["loss"]), float(out[2]["loss"]),
+                               atol=1e-3)
+
+
 @pytest.mark.parametrize("family_cfg", [
     tiny_cfg("moe", family="moe", n_experts=4, top_k=2, moe_d_ff=64,
              capacity_factor=2.0),
