@@ -34,6 +34,20 @@ matrices cost 6 instead of 9 (the exact accounting lives in
 :mod:`repro.kernels.dispatch`). The trainer feature-detects
 ``update_params`` and skips the separate ``apply_updates`` pass.
 
+``update_params`` takes two optional keyword extensions the trainer also
+feature-detects:
+
+  * ``shardings`` — a pytree of per-parameter ``NamedSharding`` (same
+    structure as params, derived from ``models/sharding.Rules``). Passed
+    through to the kernel dispatch, which shard_maps the fused step over
+    the mesh and psums the per-slice sums-of-squares over the mesh axes
+    sharding each matrix's reduce dim. Without it the fused kernels are
+    only correct on a single device / fully-replicated params.
+  * ``grad_scale`` — a scalar multiplied into every gradient at read time
+    (inside the kernels; as ``g * grad_scale`` on jnp branches, bitwise
+    identical to the trainer's old clip tree-map). This folds global-norm
+    clipping into the update and removes one full grad read+write.
+
 State invariant: ``update`` returns a state with exactly the shapes/dtypes
 ``init`` produced (f32 moments, int32 count) — ``lax.scan`` training loops
 and donated buffers rely on this fixed point (regression-tested via
@@ -104,8 +118,8 @@ def scale(
     elif impl != "jnp":
         raise ValueError(f"unknown impl {impl!r}")
 
-    def _use_kernel(shape, kind) -> bool:
-        return fused and _kd.supported(shape, kind)
+    def _use_kernel(shape, kind, mode) -> bool:
+        return fused and _kd.supported(shape, kind, mode)
 
     def init(params):
         labels = label_tree(params, rules)
@@ -122,19 +136,19 @@ def scale(
             nu=jax.tree_util.tree_map(mk_nu, labels, params),
         )
 
-    def _split(out):
-        istup = lambda x: isinstance(x, tuple)
-        return tuple(
-            jax.tree_util.tree_map(lambda o, k=k: o[k], out, is_leaf=istup)
-            for k in range(3))
-
-    def _step(grads, state, params):
+    def _step(grads, state, params, shardings=None, grad_scale=None):
         """Shared per-leaf routing for both entry points.
 
         ``params is None`` -> delta mode: return the update tree (classic
         ``update`` contract). Otherwise -> write mode: return new params
         directly (``update_params``). Keeping one copy of the label/kind/
         kernel branching is what guarantees the two modes cannot drift.
+
+        ``shardings``/``grad_scale`` (write mode): per-leaf NamedSharding
+        for the mesh-aware kernel dispatch, and the trainer's fused clip
+        factor. On jnp branches ``grad_scale`` is applied as ``g * scale``
+        before any cast — the same op the trainer's clip tree-map used, so
+        clip-then-update and fold-into-update are bitwise-equal there.
 
         Updates/applies are rounded through the gradient dtype at the
         source: a f32 update tree would materialize full-size f32 copies of
@@ -150,52 +164,82 @@ def scale(
         count = state.count
         lr_t = _lr_at(lr, count)
         alr_t = _lr_at(adam_lr, count)
+        # REPRO_FUSED is re-read on every (re)trace and keys the dispatch
+        # caches; an outer jit around the whole step still pins the mode at
+        # its own trace time (see the dispatch module docstring)
+        mode = _kd.resolve_mode() if fused else None
 
         def emit(u, g, p):
             # delta mode returns the rounded update; write mode applies it
             u = u.astype(g.dtype)
             return u if p is None else p + u.astype(p.dtype)
 
-        def leaf(lab, g, m, v, p):
+        def leaf(lab, g, m, v, p, sh):
+            # jnp-branch view of the gradient: scaled up front, exactly the
+            # op the trainer's clip tree-map used (XLA fuses it — free).
+            # Kernel branches instead thread grad_scale INTO the kernels,
+            # where it multiplies g at read time: scaling first would
+            # materialize a full g*scale copy (pallas_call is opaque to
+            # XLA fusion) — the HBM pass the fold exists to remove.
+            gsc = g if grad_scale is None else g * grad_scale
             if lab == "vector":
-                upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-                return emit(-alr_t * upd, g, p), m, v
-            gf = g.astype(_f32)
+                upd, m, v = _adam_leaf(gsc, m, v, count, b1, b2, eps)
+                return emit(-alr_t * upd, gsc, p), m, v
             s = muon_lr_scale(g.shape) if lr_scaling else 1.0
             kind = _norm_kind_for(lab, norm_last, norm_first, norm_rest)
             lr_eff = lr_t * s
             if lab in momentum_on:
-                if _use_kernel(g.shape, kind):
+                if _use_kernel(g.shape, kind, mode):
+                    gf = g.astype(_f32)
                     if p is None:
-                        m, d = _kd.momentum_norm(m, gf, beta, kind)
-                        return emit(-lr_eff * d, g, p), m, v
-                    p_new, m = _kd.momentum_norm_update(p, m, gf, beta,
-                                                        lr_eff, kind)
+                        m, d = _kd.momentum_norm(
+                            m, gf, beta, kind, gscale=grad_scale,
+                            sharding=sh, mode=mode)
+                        return emit(-lr_eff * d, gsc, p), m, v
+                    p_new, m = _kd.momentum_norm_update(
+                        p, m, gf, beta, lr_eff, kind, gscale=grad_scale,
+                        sharding=sh, mode=mode)
                     return p_new, m, v
+                gf = gsc.astype(_f32)
                 m = beta * m + (1.0 - beta) * gf
-                return emit(-lr_eff * _apply_norm(m, kind), g, p), m, v
-            if _use_kernel(g.shape, kind):
+                return emit(-lr_eff * _apply_norm(m, kind), gsc, p), m, v
+            if _use_kernel(g.shape, kind, mode):
+                gf = g.astype(_f32)
                 if p is None:
-                    return emit(-lr_eff * _kd.normalize(gf, kind), g, p), m, v
-                return _kd.norm_update(p, gf, lr_eff, kind), m, v
-            return emit(-lr_eff * _apply_norm(gf, kind), g, p), m, v
+                    return emit(-lr_eff * _kd.normalize(
+                        gf, kind, gscale=grad_scale, sharding=sh,
+                        mode=mode), gsc, p), m, v
+                return _kd.norm_update(p, gf, lr_eff, kind,
+                                       gscale=grad_scale, sharding=sh,
+                                       mode=mode), m, v
+            return emit(-lr_eff * _apply_norm(gsc.astype(_f32), kind),
+                        gsc, p), m, v
 
-        if params is None:
-            out = jax.tree_util.tree_map(
-                lambda lab, g, m, v: leaf(lab, g, m, v, None),
-                labels, grads, state.mu, state.nu)
-        else:
-            out = jax.tree_util.tree_map(leaf, labels, grads, state.mu,
-                                         state.nu, params)
-        result, mu, nu = _split(out)
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        n = len(g_leaves)
+        flat = treedef.flatten_up_to
+        lab_l, mu_l, nu_l = flat(labels), flat(state.mu), flat(state.nu)
+        p_l = flat(params) if params is not None else [None] * n
+        sh_l = flat(shardings) if shardings is not None else [None] * n
+        out = [leaf(*args) for args in zip(lab_l, g_leaves, mu_l, nu_l,
+                                           p_l, sh_l)]
+        result = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
         return result, ScaleState(count + 1, mu, nu)
 
     def update(grads, state, params=None):
         del params  # classic contract: deltas are independent of theta
         return _step(grads, state, None)
 
-    def update_params(grads, state, params):
-        """Fused step: write theta directly (no materialized update tree)."""
-        return _step(grads, state, params)
+    def update_params(grads, state, params, shardings=None, grad_scale=None):
+        """Fused step: write theta directly (no materialized update tree).
+
+        ``shardings``: optional pytree of per-param NamedSharding — makes
+        the fused kernels mesh-correct under pjit (see module docstring).
+        ``grad_scale``: optional scalar folded into the gradient read
+        (the trainer's global-norm clip factor).
+        """
+        return _step(grads, state, params, shardings, grad_scale)
 
     return GradientTransformation(init, update, update_params)

@@ -17,6 +17,20 @@ update tree) may additionally provide ``update_params``:
 
 The field defaults to ``None``; callers (e.g. the trainer) feature-detect it
 and fall back to the classic ``update`` + ``apply_updates`` sequence.
+
+``update_params`` implementations may additionally accept two optional
+keyword arguments, which callers also feature-detect (via
+``inspect.signature``) before passing:
+
+  * ``shardings`` — pytree of per-parameter ``jax.sharding.NamedSharding``
+    (same structure as params). Optimizers whose hot path runs custom
+    kernels need it to stay correct under pjit meshes: a kernel sees only
+    its local shard, so cross-shard reductions (e.g. per-column norms over
+    a row-sharded matrix) must be performed explicitly.
+  * ``grad_scale`` — scalar folded into the gradient at read time,
+    equivalent to ``update_params(tree_map(lambda g: g * grad_scale,
+    grads), ...)`` but without materializing the scaled tree. The trainer
+    uses it to fuse global-norm clipping into the parameter write.
 """
 from __future__ import annotations
 

@@ -32,7 +32,17 @@ Kernels:
   * ``norm_apply``    — element-wise tiles consuming the sums-of-squares;
     out = g / (||axis||+eps). One read of g, one write of the output.
   * ``update_apply``  — fuses the SGD subtraction: theta' = theta -
-    lr * g/(||axis||+eps). theta and g are read once and theta written once.
+    lr * g/(||axis||+eps). theta and g are read once and theta written once;
+    theta is aliased to the output (``input_output_aliases``) so under
+    buffer donation the write is truly in-place — no fresh theta allocation.
+
+Every kernel takes a ``gscale`` scalar (SMEM) applied to the gradient at
+read time (``g_eff = gscale * f32(g)``). This is how the trainer folds the
+global-norm clip factor into the fused step: the clipped gradient never
+materializes, saving the separate full grad read+write a tree-level
+``g * scale`` would cost (XLA cannot fuse element-wise prologues into a
+``pallas_call``). ``gscale`` participates in both the sum-of-squares and
+the apply, so the result is exactly clip-then-update.
 
 HBM-pass accounting per matrix parameter: one pass = one full-matrix read
 or write (the per-slice norm vector is ~1/256 of a matrix — noise). For the
@@ -100,15 +110,15 @@ def _red_mask(shape, tile_idx, block_sz, dim, axis_in_tile):
 # norm_sumsq: sum of squares along the reduce axis
 # --------------------------------------------------------------------------
 
-def _sumsq_kernel(g_ref, out_ref, acc_ref, *, n_red_tiles, red_dim, red_block,
-                  red_axis):
+def _sumsq_kernel(g_ref, gs_ref, out_ref, acc_ref, *, n_red_tiles, red_dim,
+                  red_block, red_axis):
     i = pl.program_id(2)  # reduce-axis tile (innermost)
 
     @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    gf = g_ref[0].astype(jnp.float32)
+    gf = g_ref[0].astype(jnp.float32) * gs_ref[0, 0]
     gf = jnp.where(_red_mask(gf.shape, i, red_block, red_dim, red_axis),
                    gf, 0.0)
     acc_ref[...] += jnp.sum(gf * gf, axis=red_axis, keepdims=True)
@@ -119,8 +129,9 @@ def _sumsq_kernel(g_ref, out_ref, acc_ref, *, n_red_tiles, red_dim, red_block,
 
 
 def norm_sumsq(g: jnp.ndarray, axis: str = "col", block=DEFAULT_BLOCK,
-               interpret: bool = True) -> jnp.ndarray:
-    """Per-column (axis="col") or per-row (axis="row") sum of squares.
+               interpret: bool = True, gscale=1.0) -> jnp.ndarray:
+    """Per-column (axis="col") or per-row (axis="row") sum of squares of
+    gscale * g.
 
     g (L, m, n) -> (L, 1, n) for col, (L, m, 1) for row; f32.
     """
@@ -142,27 +153,31 @@ def norm_sumsq(g: jnp.ndarray, axis: str = "col", block=DEFAULT_BLOCK,
         red_dim, red_block, red_axis = n, bn, 1
     else:
         raise ValueError(f"axis must be 'col' or 'row', got {axis!r}")
+    gs_arr = jnp.asarray(gscale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_sumsq_kernel, n_red_tiles=grid[2],
                           red_dim=red_dim, red_block=red_block,
                           red_axis=red_axis),
         grid=grid,
-        in_specs=[pl.BlockSpec((1, bm, bn), g_map)],
+        in_specs=[pl.BlockSpec((1, bm, bn), g_map),
+                  pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
+                               memory_space=pltpu.SMEM)],
         out_specs=out_spec,
         out_shape=out_shape,
         scratch_shapes=[scratch],
         interpret=interpret,
-    )(g)
+    )(g, gs_arr)
 
 
 # --------------------------------------------------------------------------
 # norm_apply / update_apply: element-wise consumers of the sums-of-squares
 # --------------------------------------------------------------------------
 
-def _norm_apply_kernel(g_ref, ss_ref, out_ref, *, eps: float):
+def _norm_apply_kernel(g_ref, ss_ref, gs_ref, out_ref, *, eps: float):
     # ss block is (1, 1, bn) or (1, bm, 1); broadcasting covers both axes.
     norm = jnp.sqrt(ss_ref[0]) + eps
-    out_ref[0] = (g_ref[0].astype(jnp.float32) / norm).astype(out_ref.dtype)
+    gf = g_ref[0].astype(jnp.float32) * gs_ref[0, 0]
+    out_ref[0] = (gf / norm).astype(out_ref.dtype)
 
 
 def _ew_specs(L, m, n, bm, bn, axis):
@@ -173,50 +188,58 @@ def _ew_specs(L, m, n, bm, bn, axis):
         ss = pl.BlockSpec((1, 1, bn), lambda l, j, i: (l, 0, j))
     else:
         ss = pl.BlockSpec((1, bm, 1), lambda l, j, i: (l, i, 0))
-    return grid, tile, ss
+    smem = pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
+                        memory_space=pltpu.SMEM)
+    return grid, tile, ss, smem
 
 
 def norm_apply(g, ss, axis: str = "col", block=DEFAULT_BLOCK,
-               eps: float = 1e-8, interpret: bool = True):
-    """g / (sqrt(ss)+eps) with ss broadcast along the reduce axis."""
+               eps: float = 1e-8, interpret: bool = True, gscale=1.0):
+    """gscale * g / (sqrt(ss)+eps) with ss broadcast along the reduce axis."""
     L, m, n = g.shape
     bm, bn = _blocks(m, n, block)
-    grid, tile, ss_spec = _ew_specs(L, m, n, bm, bn, axis)
+    grid, tile, ss_spec, smem = _ew_specs(L, m, n, bm, bn, axis)
+    gs_arr = jnp.asarray(gscale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_norm_apply_kernel, eps=eps),
         grid=grid,
-        in_specs=[tile, ss_spec],
+        in_specs=[tile, ss_spec, smem],
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((L, m, n), g.dtype),
         interpret=interpret,
-    )(g, ss)
+    )(g, ss, gs_arr)
 
 
-def _update_apply_kernel(theta_ref, g_ref, ss_ref, lr_ref, out_ref,
+def _update_apply_kernel(theta_ref, g_ref, ss_ref, lr_ref, gs_ref, out_ref,
                          *, eps: float):
     norm = jnp.sqrt(ss_ref[0]) + eps
-    upd = theta_ref[0].astype(jnp.float32) - \
-        lr_ref[0, 0] * g_ref[0].astype(jnp.float32) / norm
+    gf = g_ref[0].astype(jnp.float32) * gs_ref[0, 0]
+    upd = theta_ref[0].astype(jnp.float32) - lr_ref[0, 0] * gf / norm
     out_ref[0] = upd.astype(out_ref.dtype)
 
 
 def update_apply(theta, g, ss, lr, axis: str = "col", block=DEFAULT_BLOCK,
-                 eps: float = 1e-8, interpret: bool = True):
-    """theta - lr * g/(sqrt(ss)+eps): the fused SCALE parameter write."""
+                 eps: float = 1e-8, interpret: bool = True, gscale=1.0):
+    """theta - lr * gscale*g/(sqrt(ss)+eps): the fused SCALE parameter write.
+
+    theta is aliased to the output buffer (``input_output_aliases={0: 0}``):
+    when the caller donates theta (``donate_argnums`` on the train step) the
+    update happens in-place and no fresh theta-sized buffer is allocated.
+    """
     L, m, n = theta.shape
     bm, bn = _blocks(m, n, block)
-    grid, tile, ss_spec = _ew_specs(L, m, n, bm, bn, axis)
+    grid, tile, ss_spec, smem = _ew_specs(L, m, n, bm, bn, axis)
     lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    gs_arr = jnp.asarray(gscale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_update_apply_kernel, eps=eps),
         grid=grid,
-        in_specs=[tile, tile, ss_spec,
-                  pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
-                               memory_space=pltpu.SMEM)],
+        in_specs=[tile, tile, ss_spec, smem, smem],
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((L, m, n), theta.dtype),
+        input_output_aliases={0: 0},
         interpret=interpret,
-    )(theta, g, ss, lr_arr)
+    )(theta, g, ss, lr_arr, gs_arr)
 
 
 # --------------------------------------------------------------------------

@@ -1,7 +1,7 @@
-"""Backend-aware dispatch for the fused optimizer-update kernels.
+"""Backend- and mesh-aware dispatch for the fused optimizer-update kernels.
 
-This is the single place that decides, per (op, shape, norm kind), whether a
-SCALE update runs through the Pallas kernels and in which mode:
+This is the single place that decides, per (op, shape, norm kind, sharding),
+whether a SCALE update runs through the Pallas kernels and in which mode:
 
   * on TPU the kernels run **compiled** (the real fused, 3-HBM-pass path);
   * on CPU/GPU they run in **interpret** mode, which executes the same
@@ -17,17 +17,46 @@ x any dtype (math is f32 internally) x arbitrary shapes (remainder tiles are
 masked inside the kernels). ``larger`` resolves to col/row per shape at trace
 time. sign/ns/svd norms and >3-D params are not fused.
 
+Sharded dispatch (pjit meshes)
+------------------------------
+A bare ``pallas_call`` has no SPMD partitioning rule: under a ``("data",
+"model")`` mesh the kernel would see only its local shard and compute the
+per-column sums-of-squares over a *fraction* of the rows — silently
+normalizing by the wrong norm. Entry points therefore accept the array's
+``NamedSharding`` (derived by the trainer from ``models/sharding.Rules``)
+and, when any dim is actually sharded, wrap the kernels in ``shard_map``:
+
+  * every kernel runs on its **local shard** (per-shard HBM passes only);
+  * the sum-of-squares reduction emits a **partial** per-slice result which
+    is ``lax.psum``-ed over exactly the mesh axes that shard the *reduce*
+    dim — for ``col`` norms the axes sharding the row dim (``d_in``, e.g.
+    the FSDP ``"data"`` axis under the default rules), for ``row`` norms
+    the axes sharding the column dim (``d_out``, e.g. ``"model"``). The
+    psum moves one per-slice vector (~1/256 of a matrix) over ICI, not the
+    matrix itself;
+  * the apply stage then consumes the now-global norms shard-locally.
+
+Shardings whose reduce/batch dims do not divide the mesh axes (shard_map
+requires exact divisibility) and non-NamedSharding layouts fall back to the
+jnp reference, which GSPMD partitions correctly on its own. A replicated
+NamedSharding (no mesh axes mapped) takes the ordinary single-device path.
+
 The ``REPRO_FUSED`` environment variable overrides the mode: ``auto``
 (default), ``interpret``, ``compiled``, or ``off`` (always use the jnp
-reference — an escape hatch if a backend miscompiles). It is read at trace
-time and jit caches are not keyed on it, so set it before the first
-training step; changing it mid-process does not retrace already-compiled
-shapes.
+reference — an escape hatch if a backend miscompiles). It is re-read on
+every entry-point call and threaded through as a **static argument**, so it
+participates in the jit cache key: flipping it mid-process takes effect on
+the next call instead of serving stale compilations. (Inside an outer
+``jax.jit`` — e.g. a jitted train step — the read still happens at the
+outer trace time; the outer cache is not keyed on it.)
 
-Entry points (all jitted, scalar lr/beta may be traced schedule outputs).
-HBM passes count every full-matrix read/write, jnp-path counts in
-parentheses; the per-slice norm vector is negligible (see the accounting
-note in :mod:`repro.kernels.colnorm.colnorm`):
+Entry points (scalar lr/beta/gscale may be traced schedule outputs). All
+accept ``gscale`` — a scalar multiplied into the gradient at read time
+inside the kernels, used by the trainer to fold the global-norm clip factor
+into the fused step without a separate full grad read+write. HBM passes
+count every full-matrix read/write, jnp-path counts in parentheses; the
+per-slice norm vector is negligible (see the accounting note in
+:mod:`repro.kernels.colnorm.colnorm`):
 
   ========================  =======================================  ======
   op                        computes                                 passes
@@ -37,14 +66,23 @@ note in :mod:`repro.kernels.colnorm.colnorm`):
   ``momentum_norm``         m' = EMA(m, g); (m', normalize(m'))      5  (6)
   ``momentum_norm_update``  m' = EMA(m, g); theta - lr*normalize(m') 6  (9)
   ========================  =======================================  ======
+
+Under a mesh the same counts hold *per shard* (each device streams only its
+1/N of every matrix). The theta writes in ``norm_update`` and
+``momentum_norm_update`` alias theta to the output, so with buffer donation
+(``donate_argnums`` on the train step) the apply stage allocates no fresh
+theta.
 """
 from __future__ import annotations
 
 import functools
 import os
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .colnorm import colnorm as _ck
 from .colnorm import ref as _cref
@@ -55,11 +93,15 @@ from .scale_head import scale_head as _hk
 FUSED_KINDS = ("col", "row", "larger")
 FUSED_NDIMS = (2, 3)
 
+_MODES = ("auto", "interpret", "compiled", "off")
 
-def _mode() -> str:
+
+def resolve_mode() -> str:
+    """Read REPRO_FUSED now (never cached — see the module docstring)."""
     m = os.environ.get("REPRO_FUSED", "auto")
-    if m not in ("auto", "interpret", "compiled", "off"):
-        raise ValueError(f"REPRO_FUSED must be auto|interpret|compiled|off, got {m!r}")
+    if m not in _MODES:
+        raise ValueError(f"REPRO_FUSED must be auto|interpret|compiled|off, "
+                         f"got {m!r}")
     return m
 
 
@@ -67,9 +109,9 @@ def backend() -> str:
     return jax.devices()[0].platform
 
 
-def use_interpret() -> bool:
+def use_interpret(mode: str | None = None) -> bool:
     """Compiled on TPU, interpret oracle elsewhere (unless overridden)."""
-    mode = _mode()
+    mode = resolve_mode() if mode is None else mode
     if mode == "interpret":
         return True
     if mode == "compiled":
@@ -82,6 +124,8 @@ def resolve_kind(kind: str, shape) -> str:
 
     Delegates to :func:`repro.core.normalization.resolve_larger` so the
     jnp impl and the kernel dispatch share one tie-break for square shapes.
+    Always resolved on the **global** shape, before any shard_map: a shard
+    of a tall matrix can be wide, and the two impls must agree.
     """
     from repro.core.normalization import resolve_larger
     return resolve_larger(kind, shape)
@@ -97,80 +141,260 @@ def _ref_norm(g: jnp.ndarray, kind: str, eps: float) -> jnp.ndarray:
     return _core_normalize(g, kind)
 
 
-def supported(shape, kind: str) -> bool:
+def supported(shape, kind: str, mode: str | None = None) -> bool:
     """True when (shape, kind) is covered by the fused kernels."""
-    if _mode() == "off":
+    if (resolve_mode() if mode is None else mode) == "off":
         return False
     if len(shape) not in FUSED_NDIMS or kind not in FUSED_KINDS:
         return False
     return all(d >= 1 for d in shape)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "eps"))
-def normalize(g: jnp.ndarray, kind: str = "col",
-              eps: float = 1e-8) -> jnp.ndarray:
-    """Fused g / (||slice||+eps); falls back to the jnp oracle off-matrix."""
-    if not supported(g.shape, kind):
-        return _ref_norm(g, kind, eps)
+# --------------------------------------------------------------------------
+# Sharding plans
+# --------------------------------------------------------------------------
+
+class ShardPlan(NamedTuple):
+    """Static (hashable) shard_map recipe for one canonical (L, m, n) array.
+
+    ``spec3[d]`` is the tuple of mesh axis names sharding canon3 dim ``d``.
+    """
+    mesh: Mesh
+    spec3: tuple
+
+
+def _plan_sharding(sharding, shape):
+    """-> None (single-device path) | "ref" (GSPMD jnp fallback) | ShardPlan.
+
+    "ref" is returned for shardings shard_map cannot express exactly
+    (non-NamedSharding layouts, dims not divisible by their mesh axes): the
+    jnp reference is partitioned correctly by GSPMD, whereas running the
+    kernels shard-locally would reduce over partial slices — the exact bug
+    this module exists to prevent.
+    """
+    if sharding is None:
+        return None
+    if not isinstance(sharding, NamedSharding):
+        return "ref"
+    from repro.models.sharding import spec_mesh_axes
+    per_dim = spec_mesh_axes(sharding.spec, len(shape))
+    if len(shape) == 2:
+        per_dim = ((),) + per_dim
+    if all(not axs for axs in per_dim):
+        return None  # replicated: plain single-device semantics are exact
+    mesh = sharding.mesh
+    shape3 = (1,) + tuple(shape) if len(shape) == 2 else tuple(shape)
+    for dim, axs in zip(shape3, per_dim):
+        k = 1
+        for a in axs:
+            if a not in mesh.shape:
+                return "ref"
+            k *= mesh.shape[a]
+        if dim % k:
+            return "ref"
+    return ShardPlan(mesh, per_dim)
+
+
+def _route(shape, kind, mode, sharding):
+    """-> ("ref", None) | ("kernel", None | ShardPlan)."""
+    if not supported(shape, kind, mode):
+        return "ref", None
+    plan = _plan_sharding(sharding, shape)
+    if plan == "ref":
+        return "ref", None
+    return "kernel", plan
+
+
+def _pspec(spec3) -> P:
+    return P(*[axs if axs else None for axs in spec3])
+
+
+def _red_axes(plan: ShardPlan, axis: str):
+    """Mesh axes the per-slice sums-of-squares must psum over."""
+    return plan.spec3[1 if axis == "col" else 2]
+
+
+def _psum_ss(ss, plan, axis):
+    axes = _red_axes(plan, axis)
+    return jax.lax.psum(ss, axes) if axes else ss
+
+
+def _mapped(body, plan, n_arrays, n_outs=1):
+    """Wrap ``body`` in shard_map per ``plan`` (identity when plan is None).
+
+    The first ``n_arrays`` args are (L, m, n) canon3 arrays sharded per
+    ``plan.spec3``; the rest are replicated scalars.
+    """
+    if plan is None:
+        return body
+    sp = _pspec(plan.spec3)
+
+    def wrapped(*args):
+        in_specs = (sp,) * n_arrays + (P(),) * (len(args) - n_arrays)
+        return shard_map(body, mesh=plan.mesh, in_specs=in_specs,
+                         out_specs=(sp,) * n_outs if n_outs > 1 else sp,
+                         check_rep=False)(*args)
+
+    return wrapped
+
+
+# --------------------------------------------------------------------------
+# Entry points. Thin Python wrappers resolve REPRO_FUSED and the sharding
+# plan per call; the jitted impls take both as static args (cache-keyed).
+# --------------------------------------------------------------------------
+
+def _gs_arg(gscale):
+    return (gscale is not None,
+            jnp.asarray(1.0 if gscale is None else gscale, jnp.float32))
+
+
+def _scaled_ref(g, gs, has_gs):
+    # mirrors the trainer's clip tree-map (g * scale in g's promoted dtype)
+    return g * gs if has_gs else g
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
+                                             "has_gs"))
+def _normalize_impl(g, gs, *, kind, eps, mode, plan, has_gs):
+    if plan == "ref":
+        return _ref_norm(_scaled_ref(g, gs, has_gs), kind, eps)
     axis = resolve_kind(kind, g.shape)
-    interp = use_interpret()
-    g3 = _c3(g)
-    ss = _ck.norm_sumsq(g3, axis, interpret=interp)
-    return _ck.norm_apply(g3, ss, axis, eps=eps,
-                          interpret=interp).reshape(g.shape)
+    interp = use_interpret(mode)
+
+    def body(g3, gs):
+        ss = _ck.norm_sumsq(g3, axis, interpret=interp, gscale=gs)
+        if plan is not None:
+            ss = _psum_ss(ss, plan, axis)
+        return _ck.norm_apply(g3, ss, axis, eps=eps, interpret=interp,
+                              gscale=gs)
+
+    return _mapped(body, plan, 1)(_c3(g), gs).reshape(g.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "eps"))
-def norm_update(theta: jnp.ndarray, g: jnp.ndarray, lr, kind: str = "col",
-                eps: float = 1e-8) -> jnp.ndarray:
-    """Fused theta - lr*normalize(g); 3-pass apply stage (th r, g r, th w)."""
-    if not supported(theta.shape, kind):
+def normalize(g: jnp.ndarray, kind: str = "col", eps: float = 1e-8, *,
+              gscale=None, sharding=None, mode: str | None = None):
+    """Fused gscale*g / (||slice||+eps); jnp oracle off-matrix."""
+    mode = resolve_mode() if mode is None else mode
+    route, plan = _route(g.shape, kind, mode, sharding)
+    has_gs, gs = _gs_arg(gscale)
+    return _normalize_impl(g, gs, kind=kind, eps=eps, mode=mode,
+                           plan="ref" if route == "ref" else plan,
+                           has_gs=has_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
+                                             "has_gs"))
+def _norm_update_impl(theta, g, lr, gs, *, kind, eps, mode, plan, has_gs):
+    if plan == "ref":
+        g = _scaled_ref(g, gs, has_gs)
         return (theta.astype(jnp.float32)
                 - jnp.asarray(lr, jnp.float32)
                 * _ref_norm(g, kind, eps).astype(jnp.float32)
                 ).astype(theta.dtype)
     axis = resolve_kind(kind, theta.shape)
-    interp = use_interpret()
-    t3, g3 = _c3(theta), _c3(g)
-    ss = _ck.norm_sumsq(g3, axis, interpret=interp)
-    return _ck.update_apply(t3, g3, ss, lr, axis, eps=eps,
-                            interpret=interp).reshape(theta.shape)
+    interp = use_interpret(mode)
+
+    def body(t3, g3, gs, lr):
+        ss = _ck.norm_sumsq(g3, axis, interpret=interp, gscale=gs)
+        if plan is not None:
+            ss = _psum_ss(ss, plan, axis)
+        return _ck.update_apply(t3, g3, ss, lr, axis, eps=eps,
+                                interpret=interp, gscale=gs)
+
+    lr = jnp.asarray(lr, jnp.float32)
+    return _mapped(body, plan, 2)(_c3(theta), _c3(g), gs,
+                                  lr).reshape(theta.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "eps"))
-def momentum_norm(m: jnp.ndarray, g: jnp.ndarray, beta, kind: str = "col",
-                  eps: float = 1e-8):
-    """(m', normalize(m')) with the EMA and sumsq fused into one kernel."""
-    if not supported(m.shape, kind):
+def norm_update(theta: jnp.ndarray, g: jnp.ndarray, lr, kind: str = "col",
+                eps: float = 1e-8, *, gscale=None, sharding=None,
+                mode: str | None = None):
+    """Fused theta - lr*normalize(gscale*g); 3-pass per-shard apply stage."""
+    mode = resolve_mode() if mode is None else mode
+    route, plan = _route(theta.shape, kind, mode, sharding)
+    has_gs, gs = _gs_arg(gscale)
+    return _norm_update_impl(theta, g, lr, gs, kind=kind, eps=eps, mode=mode,
+                             plan="ref" if route == "ref" else plan,
+                             has_gs=has_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
+                                             "has_gs"))
+def _momentum_norm_impl(m, g, beta, gs, *, kind, eps, mode, plan, has_gs):
+    if plan == "ref":
+        g = _scaled_ref(g, gs, has_gs)
         m_new = (jnp.asarray(beta, jnp.float32) * m.astype(jnp.float32)
                  + (1.0 - jnp.asarray(beta, jnp.float32))
                  * g.astype(jnp.float32))
         return m_new, _ref_norm(m_new, kind, eps)
     axis = resolve_kind(kind, m.shape)
-    interp = use_interpret()
-    m3, g3 = _c3(m), _c3(g)
-    m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp)
-    d = _ck.norm_apply(m_new, ss, axis, eps=eps, interpret=interp)
+    interp = use_interpret(mode)
+
+    def body(m3, g3, gs, beta):
+        m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp,
+                                       gscale=gs)
+        if plan is not None:
+            ss = _psum_ss(ss, plan, axis)
+        d = _ck.norm_apply(m_new, ss, axis, eps=eps, interpret=interp)
+        return m_new, d
+
+    beta = jnp.asarray(beta, jnp.float32)
+    m_new, d = _mapped(body, plan, 2, n_outs=2)(_c3(m), _c3(g), gs, beta)
     return m_new.reshape(m.shape), d.reshape(m.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "eps"))
-def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
-                         beta, lr, kind: str = "col", eps: float = 1e-8):
-    """Fully fused stateful step: (theta', m') in two kernel launches."""
-    if not supported(theta.shape, kind):
-        m_new, d = momentum_norm(m, g, beta, kind, eps)
+def momentum_norm(m: jnp.ndarray, g: jnp.ndarray, beta, kind: str = "col",
+                  eps: float = 1e-8, *, gscale=None, sharding=None,
+                  mode: str | None = None):
+    """(m', normalize(m')) with the EMA and sumsq fused into one kernel."""
+    mode = resolve_mode() if mode is None else mode
+    route, plan = _route(m.shape, kind, mode, sharding)
+    has_gs, gs = _gs_arg(gscale)
+    return _momentum_norm_impl(m, g, beta, gs, kind=kind, eps=eps, mode=mode,
+                               plan="ref" if route == "ref" else plan,
+                               has_gs=has_gs)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
+                                             "has_gs"))
+def _momentum_norm_update_impl(theta, m, g, beta, lr, gs, *, kind, eps, mode,
+                               plan, has_gs):
+    if plan == "ref":
+        m_new, d = _momentum_norm_impl(m, g, beta, gs, kind=kind, eps=eps,
+                                       mode=mode, plan="ref", has_gs=has_gs)
         theta_new = (theta.astype(jnp.float32)
                      - jnp.asarray(lr, jnp.float32) * d.astype(jnp.float32)
                      ).astype(theta.dtype)
         return theta_new, m_new
     axis = resolve_kind(kind, theta.shape)
-    interp = use_interpret()
-    t3, m3, g3 = _c3(theta), _c3(m), _c3(g)
-    m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp)
-    theta_new = _hk.head_update_apply(t3, m_new, ss, lr, axis, eps=eps,
-                                      interpret=interp)
-    return theta_new.reshape(theta.shape), m_new.reshape(m.shape)
+    interp = use_interpret(mode)
+
+    def body(t3, m3, g3, gs, beta, lr):
+        m_new, ss = _hk.momentum_sumsq(m3, g3, beta, axis, interpret=interp,
+                                       gscale=gs)
+        if plan is not None:
+            ss = _psum_ss(ss, plan, axis)
+        theta_new = _hk.head_update_apply(t3, m_new, ss, lr, axis, eps=eps,
+                                          interpret=interp)
+        return theta_new, m_new
+
+    beta = jnp.asarray(beta, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    t_new, m_new = _mapped(body, plan, 3, n_outs=2)(
+        _c3(theta), _c3(m), _c3(g), gs, beta, lr)
+    return t_new.reshape(theta.shape), m_new.reshape(m.shape)
+
+
+def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
+                         beta, lr, kind: str = "col", eps: float = 1e-8, *,
+                         gscale=None, sharding=None, mode: str | None = None):
+    """Fully fused stateful step: (theta', m') in two kernel launches."""
+    mode = resolve_mode() if mode is None else mode
+    route, plan = _route(theta.shape, kind, mode, sharding)
+    has_gs, gs = _gs_arg(gscale)
+    return _momentum_norm_update_impl(
+        theta, m, g, beta, lr, gs, kind=kind, eps=eps, mode=mode,
+        plan="ref" if route == "ref" else plan, has_gs=has_gs)
 
 
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate

@@ -34,8 +34,9 @@ from ..colnorm.colnorm import (DEFAULT_BLOCK, _blocks, _canon3, _red_mask,
 __all__ = ["DEFAULT_BLOCK", "momentum_sumsq", "head_update_apply"]
 
 
-def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, m_out_ref, ss_ref, acc_ref,
-                           *, n_red_tiles, red_dim, red_block, red_axis):
+def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, gs_ref, m_out_ref, ss_ref,
+                           acc_ref, *, n_red_tiles, red_dim, red_block,
+                           red_axis):
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -44,7 +45,7 @@ def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, m_out_ref, ss_ref, acc_ref,
 
     beta = beta_ref[0, 0]
     m_new = beta * m_ref[0].astype(jnp.float32) + \
-        (1.0 - beta) * g_ref[0].astype(jnp.float32)
+        (1.0 - beta) * (g_ref[0].astype(jnp.float32) * gs_ref[0, 0])
     m_out_ref[0] = m_new.astype(m_out_ref.dtype)
     masked = jnp.where(
         _red_mask(m_new.shape, i, red_block, red_dim, red_axis), m_new, 0.0)
@@ -56,11 +57,13 @@ def _momentum_sumsq_kernel(m_ref, g_ref, beta_ref, m_out_ref, ss_ref, acc_ref,
 
 
 def momentum_sumsq(m, g, beta, axis: str = "col", block=DEFAULT_BLOCK,
-                   interpret: bool = True):
-    """(m', ss) where m' = beta*m + (1-beta)*g, ss = sumsq(m') along axis.
+                   interpret: bool = True, gscale=1.0):
+    """(m', ss): m' = beta*m + (1-beta)*gscale*g, ss = sumsq(m') along axis.
 
     m, g: (L, mm, n). Returns m' (L, mm, n) f32 and ss (L, 1, n) for col /
-    (L, mm, 1) for row, f32.
+    (L, mm, 1) for row, f32. ``gscale`` folds the trainer's grad-clip factor
+    into the EMA read (see colnorm kernel docs). m is aliased to m' so the
+    momentum write is in-place under buffer donation.
     """
     L, mm, n = m.shape
     bm, bn = _blocks(mm, n, block)
@@ -81,23 +84,27 @@ def momentum_sumsq(m, g, beta, axis: str = "col", block=DEFAULT_BLOCK,
     else:
         raise ValueError(f"axis must be 'col' or 'row', got {axis!r}")
     beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    gs_arr = jnp.asarray(gscale, jnp.float32).reshape(1, 1)
+    smem = pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
+                        memory_space=pltpu.SMEM)
     return pl.pallas_call(
         functools.partial(_momentum_sumsq_kernel, n_red_tiles=grid[2],
                           red_dim=red_dim, red_block=red_block,
                           red_axis=red_axis),
         grid=grid,
-        in_specs=[tile, tile,
-                  pl.BlockSpec((1, 1), lambda l, j, i: (0, 0),
-                               memory_space=pltpu.SMEM)],
+        in_specs=[tile, tile, smem, smem],
         out_specs=[tile, ss_spec],
         out_shape=[jax.ShapeDtypeStruct((L, mm, n), jnp.float32), ss_shape],
+        input_output_aliases=({0: 0} if m.dtype == jnp.float32 else {}),
         scratch_shapes=[scratch],
         interpret=interpret,
-    )(m, g, beta_arr)
+    )(m, g, beta_arr, gs_arr)
 
 
 def head_update_apply(theta, m_new, ss, lr, axis: str = "col",
                       block=DEFAULT_BLOCK, eps: float = 1e-8,
                       interpret: bool = True):
-    """theta - lr * m'/(sqrt(ss)+eps); shares the colnorm apply kernel."""
+    """theta - lr * m'/(sqrt(ss)+eps); shares the colnorm apply kernel
+    (theta aliased in-place, no gscale — the clip factor already entered
+    through the momentum EMA)."""
     return update_apply(theta, m_new, ss, lr, axis, block, eps, interpret)

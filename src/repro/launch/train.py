@@ -63,10 +63,20 @@ def main(argv=None):
 
     cfg, tx = build(args)
     rules = Rules(cfg.rule_overrides)
-    mesh = make_host_mesh(data=len(jax.devices()))
-    print(f"arch={cfg.name} optimizer={args.optimizer} devices={len(jax.devices())}")
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(data=n_dev)
+    print(f"arch={cfg.name} optimizer={args.optimizer} devices={n_dev}")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if n_dev > 1:
+        # place params per the rules table so the fused optimizer runs
+        # sharded from step 0 (its kernels psum norm reductions over the
+        # mesh — see repro.kernels.dispatch)
+        from repro.models import param_logical_axes
+        from repro.models.sharding import tree_shardings
+        params = jax.device_put(
+            params, tree_shardings(param_logical_axes(cfg), mesh, rules,
+                                   params))
     state = init_state(params, tx)
     start_step = 0
     if args.resume == "auto" and args.ckpt_dir:
@@ -77,9 +87,9 @@ def main(argv=None):
 
     ds = make_dataset(cfg, seq_len=args.seq, global_batch=args.batch,
                       seed=args.seed)
-    step_fn = jax.jit(make_train_step(cfg, tx, grad_accum=args.grad_accum,
-                                      clip_norm=args.clip_norm, rules=rules),
-                      donate_argnums=(0,))
+    step_fn = make_train_step(cfg, tx, grad_accum=args.grad_accum,
+                              clip_norm=args.clip_norm, rules=rules,
+                              mesh=mesh if n_dev > 1 else None, donate=True)
 
     t0 = time.time()
     pending = None
