@@ -9,6 +9,21 @@ import jax
 
 
 @contextlib.contextmanager
+def repro_fused(mode: str):
+    """Pin REPRO_FUSED to ``mode`` for the enclosed block, restoring the
+    prior value (or unset state) afterwards."""
+    prev = os.environ.get("REPRO_FUSED")
+    os.environ["REPRO_FUSED"] = mode
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FUSED", None)
+        else:
+            os.environ["REPRO_FUSED"] = prev
+
+
+@contextlib.contextmanager
 def fused_off_unless_tpu():
     """Pin REPRO_FUSED=off for the enclosed block on non-TPU backends.
 
@@ -21,15 +36,8 @@ def fused_off_unless_tpu():
     if jax.devices()[0].platform == "tpu":
         yield
         return
-    prev = os.environ.get("REPRO_FUSED")
-    os.environ["REPRO_FUSED"] = "off"
-    try:
+    with repro_fused("off"):
         yield
-    finally:
-        if prev is None:
-            os.environ.pop("REPRO_FUSED", None)
-        else:
-            os.environ["REPRO_FUSED"] = prev
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -45,6 +53,24 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(rows):
+def emit(rows, json_path=None):
+    """Print rows as CSV; optionally also write them as a JSON artifact
+    (list of {name, us, derived} — what the CI bench-smoke job uploads)."""
     for name, us, derived in rows:
         print(f"{name},{us if us is not None else ''},{derived}")
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump([{"name": n, "us": us, "derived": d}
+                       for n, us, d in rows], f, indent=2)
+        print(f"# wrote {json_path}")
+
+
+def json_arg(argv):
+    """Pull the '--json PATH' flag out of a benchmark's argv (or None)."""
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            raise SystemExit("--json requires a path argument")
+        return argv[i + 1]
+    return None

@@ -228,10 +228,11 @@ def run_sharded(quick: bool = True):
 if __name__ == "__main__":
     import sys
 
-    from .common import emit
+    from .common import emit, json_arg
     if "--sharded" in sys.argv:
         # quick census by default: the parity check runs the real kernels,
         # which off-TPU means the Pallas interpreter (--full on TPU)
-        emit(run_sharded(quick="--full" not in sys.argv))
+        emit(run_sharded(quick="--full" not in sys.argv),
+             json_path=json_arg(sys.argv))
     else:
-        emit(run(quick=False))
+        emit(run(quick="--quick" in sys.argv), json_path=json_arg(sys.argv))

@@ -15,12 +15,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: norms,memory,pretrain,throughput,"
-                         "variance,roofline,fused")
+                         "variance,roofline,fused,xent")
     args = ap.parse_args()
     quick = not args.full
 
     from . import (fused_update, memory_table, norm_timing, pretrain_proxy,
-                   roofline, throughput, variance_analysis)
+                   roofline, throughput, variance_analysis, xent_fused)
     sections = {
         "norms": norm_timing,
         "memory": memory_table,
@@ -29,6 +29,7 @@ def main() -> None:
         "variance": variance_analysis,
         "roofline": roofline,
         "fused": fused_update,
+        "xent": xent_fused,
     }
     only = set(args.only.split(",")) if args.only else set(sections)
 

@@ -49,9 +49,24 @@ feature-detects:
     clipping into the update and removes one full grad read+write.
 
 State invariant: ``update`` returns a state with exactly the shapes/dtypes
-``init`` produced (f32 moments, int32 count) — ``lax.scan`` training loops
-and donated buffers rely on this fixed point (regression-tested via
-``jax.eval_shape``).
+``init`` produced (int32 count; f32 Adam moments; momentum in
+``momentum_dtype``) — ``lax.scan`` training loops and donated buffers rely
+on this fixed point (regression-tested via ``jax.eval_shape``).
+
+``momentum_dtype`` ("float32" default, "bfloat16") sets the storage dtype
+of the momentum buffers — SCALE's only matrix state, carried on the LM
+head. bf16 halves the head's optimizer memory at some quality cost (the
+paper's App. C keeps f32). Semantics are cast-on-read/write: the EMA and
+the norm reduction run in f32 and only the *stored* momentum is rounded.
+The two impls differ in one bf16-rounding-sized detail: the jnp branch
+normalizes the pre-cast f32 EMA, while the fused kernels' apply stage
+consumes the momentum it just *stored* (``momentum_sumsq`` emits
+m'.astype(momentum_dtype) while accumulating the f32 sums-of-squares; an
+extra f32 emit for the apply would double the momentum HBM traffic the
+fusion exists to avoid). So under bf16 momentum the impls agree to bf16
+rounding (parity-tested at that tolerance), and with the f32 default they
+remain exactly as before. Adam's vector moments stay f32 regardless
+(negligible; Appendix C).
 """
 from __future__ import annotations
 
@@ -100,17 +115,25 @@ def scale(
     rules: Optional[LabelRules] = None,
     lr_scaling: bool = False,
     impl: str = "jnp",
+    momentum_dtype: str = "float32",
 ) -> GradientTransformation:
     """Build the SCALE optimizer (paper Algorithm 1).
 
     ``lr_scaling=True`` enables the Muon-style per-matrix lr scale the paper
     uses for its 1B run (Appendix C). ``impl="fused"`` routes matrix updates
     through :mod:`repro.kernels.dispatch` (Pallas kernels).
+    ``momentum_dtype="bfloat16"`` halves the momentum (LM-head) state with
+    cast-on-read/write semantics (see the module docstring).
     """
     rules = rules or LabelRules()
     adam_lr = adam_lr if adam_lr is not None else lr
     norm_first = norm_first if norm_first is not None else norm_rest
     momentum_on = tuple(momentum_on)
+    try:
+        mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[momentum_dtype]
+    except KeyError:
+        raise ValueError(f"momentum_dtype must be float32|bfloat16, "
+                         f"got {momentum_dtype!r}") from None
 
     fused = impl == "fused"
     if fused:
@@ -125,7 +148,14 @@ def scale(
         labels = label_tree(params, rules)
 
         def mk_mu(lab, p):
-            return _zeros(p) if (lab in momentum_on or lab == "vector") else _empty(p)
+            # vector check first: update() routes vectors to Adam (f32
+            # moments) even when "vector" is listed in momentum_on, so
+            # init must agree or the state dtype fixed point breaks
+            if lab == "vector":
+                return _zeros(p)
+            if lab in momentum_on:  # SCALE momentum: momentum_dtype storage
+                return jnp.zeros(p.shape, mdt)
+            return _empty(p)
 
         def mk_nu(lab, p):
             return _zeros(p) if lab == "vector" else _empty(p)
@@ -201,8 +231,10 @@ def scale(
                         sharding=sh, mode=mode)
                     return p_new, m, v
                 gf = gsc.astype(_f32)
-                m = beta * m + (1.0 - beta) * gf
-                return emit(-lr_eff * _apply_norm(m, kind), gsc, p), m, v
+                # cast-on-read/write: EMA and norm in f32, storage in mdt
+                m_f = beta * m.astype(_f32) + (1.0 - beta) * gf
+                return (emit(-lr_eff * _apply_norm(m_f, kind), gsc, p),
+                        m_f.astype(mdt), v)
             if _use_kernel(g.shape, kind, mode):
                 gf = g.astype(_f32)
                 if p is None:

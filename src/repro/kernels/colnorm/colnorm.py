@@ -194,8 +194,14 @@ def _ew_specs(L, m, n, bm, bn, axis):
 
 
 def norm_apply(g, ss, axis: str = "col", block=DEFAULT_BLOCK,
-               eps: float = 1e-8, interpret: bool = True, gscale=1.0):
-    """gscale * g / (sqrt(ss)+eps) with ss broadcast along the reduce axis."""
+               eps: float = 1e-8, interpret: bool = True, gscale=1.0,
+               out_dtype=None):
+    """gscale * g / (sqrt(ss)+eps) with ss broadcast along the reduce axis.
+
+    ``out_dtype`` overrides the output dtype (math is f32 regardless) —
+    used when g is a reduced-precision momentum buffer but the normalized
+    direction must stay f32.
+    """
     L, m, n = g.shape
     bm, bn = _blocks(m, n, block)
     grid, tile, ss_spec, smem = _ew_specs(L, m, n, bm, bn, axis)
@@ -205,7 +211,7 @@ def norm_apply(g, ss, axis: str = "col", block=DEFAULT_BLOCK,
         grid=grid,
         in_specs=[tile, ss_spec, smem],
         out_specs=tile,
-        out_shape=jax.ShapeDtypeStruct((L, m, n), g.dtype),
+        out_shape=jax.ShapeDtypeStruct((L, m, n), out_dtype or g.dtype),
         interpret=interpret,
     )(g, ss, gs_arr)
 

@@ -12,10 +12,24 @@ whether a SCALE update runs through the Pallas kernels and in which mode:
     compiled-XLA jnp path (the benchmarks do this automatically);
   * shapes/kinds outside the coverage matrix fall back to the jnp reference.
 
-Coverage matrix (``supported``): ndim in {2, 3} x kind in {col, row, larger}
-x any dtype (math is f32 internally) x arbitrary shapes (remainder tiles are
-masked inside the kernels). ``larger`` resolves to col/row per shape at trace
-time. sign/ns/svd norms and >3-D params are not fused.
+Coverage matrix (``supported`` / ``xent_supported``):
+
+  ==================  =====================================================
+  op family           covered
+  ==================  =====================================================
+  optimizer updates   ndim in {2, 3} x kind in {col, row, larger} x any
+                      dtype (math is f32 internally) x arbitrary shapes
+                      (remainder tiles are masked inside the kernels).
+                      ``larger`` resolves to col/row per shape at trace
+                      time. sign/ns/svd norms and >3-D params are not
+                      fused.
+  xent (LM head)      h (N, D) or (B, S, D) x w (D, V) x any dtype x
+                      arbitrary shapes (padded vocab and remainder tiles
+                      masked via the tile iota) x masked (-1) labels. One
+                      head at a time — the audio multi-codebook head
+                      dispatches per codebook (its 4-D (B, C, S, D) case
+                      never reaches dispatch directly).
+  ==================  =====================================================
 
 Sharded dispatch (pjit meshes)
 ------------------------------
@@ -72,6 +86,26 @@ Under a mesh the same counts hold *per shard* (each device streams only its
 ``momentum_norm_update`` alias theta to the output, so with buffer donation
 (``donate_argnums`` on the train step) the apply stage allocates no fresh
 theta.
+
+Fused cross-entropy (``xent_loss``)
+-----------------------------------
+The LM-head loss is registered through the same machinery: ``xent_loss``
+is a ``custom_vjp`` whose forward/backward run the blockwise Pallas
+kernels in :mod:`repro.kernels.xent` (logits never materialize beyond a
+(token-tile, vocab-tile) VMEM block). Routing mirrors the update ops —
+compiled on TPU, interpret oracle elsewhere, ``REPRO_FUSED=off`` or an
+uncovered shape/sharding routes to the reference (callers that must stay
+memory-safe check ``xent_route`` first: the in-dispatch fallback is the
+*full-logit* test-scale oracle, while ``models.model.lm_loss`` keeps the
+chunked scan as the production jnp path). Sharded dispatch takes the
+hidden/head ``NamedSharding`` pair: tokens shard over the axes sharding
+h's leading (batch) dim, the vocab dim over w's column axes — each shard
+runs the kernels on its local (N/k, D) x (D, V/m) problem with a global
+column offset, then the per-shard (lse, ll) combine via ``pmax``/``psum``
+over the vocab axes exactly as the norm kernels psum column sums; dH
+psums over the vocab axes, dW over the token axes. w's embed-dim sharding
+is gathered at shard_map entry (the same all-gather GSPMD inserts for the
+unfused head matmul).
 """
 from __future__ import annotations
 
@@ -81,6 +115,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -89,6 +124,8 @@ from .colnorm import ref as _cref
 from .colnorm.colnorm import _canon3 as _c3
 from .scale_head import ref as _href
 from .scale_head import scale_head as _hk
+from .xent import ref as _xref
+from .xent import xent as _xk
 
 FUSED_KINDS = ("col", "row", "larger")
 FUSED_NDIMS = (2, 3)
@@ -326,7 +363,9 @@ def _momentum_norm_impl(m, g, beta, gs, *, kind, eps, mode, plan, has_gs):
         m_new = (jnp.asarray(beta, jnp.float32) * m.astype(jnp.float32)
                  + (1.0 - jnp.asarray(beta, jnp.float32))
                  * g.astype(jnp.float32))
-        return m_new, _ref_norm(m_new, kind, eps)
+        # momentum storage dtype is m's dtype (cast-on-write; the norm is
+        # computed from the pre-cast f32 EMA, matching the kernel)
+        return m_new.astype(m.dtype), _ref_norm(m_new, kind, eps)
     axis = resolve_kind(kind, m.shape)
     interp = use_interpret(mode)
 
@@ -335,7 +374,14 @@ def _momentum_norm_impl(m, g, beta, gs, *, kind, eps, mode, plan, has_gs):
                                        gscale=gs)
         if plan is not None:
             ss = _psum_ss(ss, plan, axis)
-        d = _ck.norm_apply(m_new, ss, axis, eps=eps, interpret=interp)
+        # d is emitted f32 even when the stored momentum is bf16 (the
+        # update tree must not inherit the storage quantization). Its
+        # numerator is the *stored* m' — re-emitting a f32 copy for the
+        # apply would double the momentum traffic — so under bf16 storage
+        # the direction differs from the jnp route's pre-cast-EMA norm by
+        # bf16 rounding (see the momentum_dtype note in core/scale.py).
+        d = _ck.norm_apply(m_new, ss, axis, eps=eps, interpret=interp,
+                           out_dtype=jnp.float32)
         return m_new, d
 
     beta = jnp.asarray(beta, jnp.float32)
@@ -397,6 +443,219 @@ def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
         plan="ref" if route == "ref" else plan, has_gs=has_gs)
 
 
+# --------------------------------------------------------------------------
+# Fused LM-head cross-entropy
+# --------------------------------------------------------------------------
+
+class XentPlan(NamedTuple):
+    """Static shard_map recipe for the fused xent.
+
+    ``tok_axes``: mesh axes sharding the leading (batch) dim of h/labels.
+    ``voc_axes``: mesh axes sharding w's vocab dim (dim 1). w's embed dim
+    is always gathered inside the shard_map (in_spec ``None``).
+    """
+    mesh: Mesh
+    tok_axes: tuple
+    voc_axes: tuple
+
+
+def xent_supported(h_shape, w_shape, mode: str | None = None) -> bool:
+    """True when (h, w) shapes are covered by the fused xent kernels."""
+    if (resolve_mode() if mode is None else mode) == "off":
+        return False
+    if len(h_shape) not in (2, 3) or len(w_shape) != 2:
+        return False
+    if h_shape[-1] != w_shape[0]:
+        return False
+    return all(d >= 1 for d in tuple(h_shape) + tuple(w_shape))
+
+
+def _axes_prod(mesh: Mesh, axes) -> int | None:
+    k = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return None
+        k *= mesh.shape[a]
+    return k
+
+
+def _plan_xent(h_sharding, w_sharding, h_shape, w_shape):
+    """-> None (single-device) | "ref" | XentPlan.
+
+    "ref" for layouts shard_map cannot express exactly: non-NamedSharding,
+    mismatched meshes, h sharded on a non-leading dim (seq/embed), or
+    token/vocab dims not divisible by their mesh axes. The jnp chunked
+    path partitions those correctly through GSPMD.
+    """
+    if h_sharding is None and w_sharding is None:
+        return None
+    mesh = None
+    for sh in (h_sharding, w_sharding):
+        if sh is None:
+            continue
+        if not isinstance(sh, NamedSharding):
+            return "ref"
+        if mesh is not None and sh.mesh != mesh:
+            return "ref"
+        mesh = sh.mesh
+    from repro.models.sharding import spec_mesh_axes
+    tok_axes = voc_axes = ()
+    if h_sharding is not None:
+        per = spec_mesh_axes(h_sharding.spec, len(h_shape))
+        if any(per[1:]):
+            return "ref"  # seq- or embed-sharded hidden: GSPMD handles it
+        tok_axes = per[0]
+    if w_sharding is not None:
+        voc_axes = spec_mesh_axes(w_sharding.spec, 2)[1]
+    if not tok_axes and not voc_axes:
+        return None  # replicated (or only w's gathered embed dim sharded)
+    if set(tok_axes) & set(voc_axes):
+        # one mesh axis sharding both tokens and vocab: each device holds
+        # a *different* token block AND vocab block, so the lse/ll psum
+        # over that axis would mix statistics across token shards —
+        # silently wrong, exactly what the ref fallback exists to prevent
+        return "ref"
+    kt = _axes_prod(mesh, tok_axes)
+    kv = _axes_prod(mesh, voc_axes)
+    if kt is None or kv is None or h_shape[0] % kt or w_shape[1] % kv:
+        return "ref"
+    return XentPlan(mesh, tuple(tok_axes), tuple(voc_axes))
+
+
+def xent_route(h_shape, w_shape, mode: str | None = None, h_sharding=None,
+               w_sharding=None):
+    """-> ("ref", None) | ("kernel", None | XentPlan).
+
+    Callers that must never materialize full logits (the model's loss)
+    take their own chunked path on "ref"; ``xent_loss``'s built-in ref is
+    the full-logit test-scale oracle.
+    """
+    if not xent_supported(h_shape, w_shape, mode):
+        return "ref", None
+    plan = _plan_xent(h_sharding, w_sharding, h_shape, w_shape)
+    if plan == "ref":
+        return "ref", None
+    return "kernel", plan
+
+
+@functools.lru_cache(maxsize=None)
+def _xent_fused(vocab_size: int, interp: bool, plan, block):
+    """Build the custom_vjp'd fused xent for one static configuration.
+
+    Cached so repeated traces reuse one custom_vjp object (and its jit
+    caches). ``plan`` is an XentPlan or None; ``block`` a (bn, bv) tuple
+    or None.
+    """
+    mesh = plan.mesh if plan is not None else None
+    tok_axes = plan.tok_axes if plan is not None else ()
+    voc_axes = plan.voc_axes if plan is not None else ()
+
+    def _voffset(v_local: int):
+        """Global column id of this shard's first w column (0 off-mesh)."""
+        if not voc_axes:
+            return 0
+        idx = jnp.int32(0)
+        for a in voc_axes:  # major-to-minor, matching GSPMD's dim split
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx * v_local
+
+    def _specs(h_ndim, lab_ndim):
+        tok = tuple(tok_axes) or None
+        hspec = P(*(tok,) + (None,) * (h_ndim - 1))
+        lspec = P(*(tok,) + (None,) * (lab_ndim - 1))
+        wspec = P(None, tuple(voc_axes) or None)
+        return hspec, wspec, lspec
+
+    def _fwd_parts(h, w, labels):
+        def body(hb, wb, lab):
+            lse, ll = _xk.xent_fwd(
+                hb.reshape(-1, hb.shape[-1]), wb, lab.reshape(-1),
+                vocab_size=vocab_size, col_offset=_voffset(wb.shape[1]),
+                block=block, interpret=interp)
+            if voc_axes:
+                m = jax.lax.pmax(lse, voc_axes)
+                lse = m + jnp.log(jax.lax.psum(jnp.exp(lse - m), voc_axes))
+                ll = jax.lax.psum(ll, voc_axes)
+            return lse.reshape(lab.shape), ll.reshape(lab.shape)
+
+        if plan is None:
+            return body(h, w, labels)
+        hspec, wspec, lspec = _specs(h.ndim, labels.ndim)
+        return shard_map(body, mesh=mesh, in_specs=(hspec, wspec, lspec),
+                         out_specs=(lspec, lspec), check_rep=False)(
+                             h, w, labels)
+
+    def _bwd_parts(h, w, labels, lse, gl):
+        def body(hb, wb, lab, lse_, gl_):
+            h2 = hb.reshape(-1, hb.shape[-1])
+            args = (h2, wb, lab.reshape(-1), lse_.reshape(-1),
+                    gl_.reshape(-1))
+            kw = dict(vocab_size=vocab_size, block=block, interpret=interp,
+                      col_offset=_voffset(wb.shape[1]))
+            # partial sums psum in f32, then round to the cotangent dtype
+            dh = _xk.xent_bwd_dh(
+                *args, **kw,
+                out_dtype=jnp.float32 if voc_axes else hb.dtype)
+            dw = _xk.xent_bwd_dw(
+                *args, **kw,
+                out_dtype=jnp.float32 if tok_axes else wb.dtype)
+            if voc_axes:
+                dh = jax.lax.psum(dh, voc_axes).astype(hb.dtype)
+            if tok_axes:
+                dw = jax.lax.psum(dw, tok_axes).astype(wb.dtype)
+            return dh.reshape(hb.shape), dw
+
+        if plan is None:
+            return body(h, w, labels, lse, gl)
+        hspec, wspec, lspec = _specs(h.ndim, labels.ndim)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(hspec, wspec, lspec, lspec, lspec),
+                         out_specs=(hspec, wspec), check_rep=False)(
+                             h, w, labels, lse, gl)
+
+    @jax.custom_vjp
+    def fused(h, w, labels):
+        lse, ll = _fwd_parts(h, w, labels)
+        return jnp.where(labels >= 0, lse - ll, 0.0)
+
+    def fwd(h, w, labels):
+        lse, ll = _fwd_parts(h, w, labels)
+        return jnp.where(labels >= 0, lse - ll, 0.0), (h, w, labels, lse)
+
+    def bwd(res, g):
+        h, w, labels, lse = res
+        gl = g.astype(jnp.float32) * (labels >= 0)
+        dh, dw = _bwd_parts(h, w, labels, lse, gl)
+        return dh, dw, np.zeros(labels.shape, jax.dtypes.float0)
+
+    fused.defvjp(fwd, bwd)
+    return fused
+
+
+def _xent_ref(h, w, labels, *, vocab_size: int):
+    """Full-logit jnp oracle (test scale; see ``xent_route``)."""
+    return _xref.losses(h, w, labels, vocab_size)
+
+
+def xent_loss(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray, *,
+              vocab_size: int, mode: str | None = None, h_sharding=None,
+              w_sharding=None, block=None):
+    """Fused per-token LM-head cross-entropy (custom_vjp, see module doc).
+
+    h (..., D), w (D, V), labels h.shape[:-1] int32 (-1 = masked).
+    Returns f32 losses of labels.shape; masked tokens are 0 in both the
+    value and the (h, w) gradients. Padded vocab columns (>= vocab_size)
+    never enter the logsumexp.
+    """
+    mode = resolve_mode() if mode is None else mode
+    route, plan = xent_route(h.shape, w.shape, mode, h_sharding, w_sharding)
+    if route == "ref":
+        return _xent_ref(h, w, labels, vocab_size=vocab_size)
+    return _xent_fused(vocab_size, use_interpret(mode), plan,
+                       tuple(block) if block is not None else None)(
+                           h, w, labels)
+
+
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate
 # this to keep the parity matrix and the dispatch table in sync.
 REGISTRY = {
@@ -404,4 +663,5 @@ REGISTRY = {
     "norm_update": (norm_update, _cref.norm_update),
     "momentum_norm": (momentum_norm, _href.momentum_norm),
     "momentum_norm_update": (momentum_norm_update, _href.momentum_norm_update),
+    "xent_loss": (xent_loss, _xent_ref),
 }

@@ -60,9 +60,12 @@ def momentum_sumsq(m, g, beta, axis: str = "col", block=DEFAULT_BLOCK,
                    interpret: bool = True, gscale=1.0):
     """(m', ss): m' = beta*m + (1-beta)*gscale*g, ss = sumsq(m') along axis.
 
-    m, g: (L, mm, n). Returns m' (L, mm, n) f32 and ss (L, 1, n) for col /
-    (L, mm, 1) for row, f32. ``gscale`` folds the trainer's grad-clip factor
-    into the EMA read (see colnorm kernel docs). m is aliased to m' so the
+    m, g: (L, mm, n). Returns m' (L, mm, n) in **m's dtype** (the momentum
+    storage dtype — bf16 under ``scale(momentum_dtype="bfloat16")``) and ss
+    (L, 1, n) for col / (L, mm, 1) for row, f32. The EMA and the
+    sums-of-squares are computed in f32; only the emitted m' is rounded
+    (cast-on-write). ``gscale`` folds the trainer's grad-clip factor into
+    the EMA read (see colnorm kernel docs). m is aliased to m' so the
     momentum write is in-place under buffer donation.
     """
     L, mm, n = m.shape
@@ -94,8 +97,8 @@ def momentum_sumsq(m, g, beta, axis: str = "col", block=DEFAULT_BLOCK,
         grid=grid,
         in_specs=[tile, tile, smem, smem],
         out_specs=[tile, ss_spec],
-        out_shape=[jax.ShapeDtypeStruct((L, mm, n), jnp.float32), ss_shape],
-        input_output_aliases=({0: 0} if m.dtype == jnp.float32 else {}),
+        out_shape=[jax.ShapeDtypeStruct((L, mm, n), m.dtype), ss_shape],
+        input_output_aliases={0: 0},
         scratch_shapes=[scratch],
         interpret=interpret,
     )(m, g, beta_arr, gs_arr)

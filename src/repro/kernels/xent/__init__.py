@@ -1,0 +1,4 @@
+# Fused LM-head cross-entropy kernels. As with the optimizer-update
+# packages, `xent.py` holds the Pallas kernels and `ref.py` the pure-jnp
+# oracle; `repro.kernels.dispatch` owns routing (backend/mode selection,
+# the coverage matrix, shard_map plans) — import that, not this.

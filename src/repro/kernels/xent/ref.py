@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused LM-head cross-entropy.
+
+Materializes the full (N, V) logit matrix, so it is a *test-scale* oracle:
+the memory-safe jnp fallback for training is the chunked scan in
+``repro.models.model.lm_loss``, which stays the bitwise reference for
+``REPRO_FUSED=off``. Padded vocab columns are masked to -1e9 exactly like
+``models.model._mask_pad_vocab`` (exp(-1e9 - max) underflows to 0 in f32,
+so "mask to -1e9 and include" equals the kernels' "exclude via iota mask").
+
+Everything is differentiable: parity tests take ``jax.grad`` of these
+functions to pin dH/dW for the backward kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def logits_masked(h: jnp.ndarray, w: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """f32 logits (..., V) with padded-vocab columns masked to -1e9."""
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    if vocab_size == w.shape[-1]:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < vocab_size, logits, jnp.float32(NEG))
+
+
+def lse_ll(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+           vocab_size: int):
+    """Per-token (logsumexp, label-logit); ll is 0 for masked (-1) labels.
+
+    h (..., D), w (D, V), labels (...) int32 -> two f32 arrays of
+    labels.shape. Matches what the forward kernel emits per vocab shard.
+    """
+    logits = logits_masked(h, w, vocab_size)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    return lse, jnp.where(labels >= 0, ll, 0.0)
+
+
+def losses(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+           vocab_size: int) -> jnp.ndarray:
+    """Per-token cross-entropy, 0 for masked (-1) labels; f32.
+
+    Differentiable in (h, w): the value AND gradient contract the fused
+    ``dispatch.xent_loss`` must reproduce (masked tokens contribute no
+    gradient — the mask sits inside, not on a caller-side weight).
+    """
+    lse, ll = lse_ll(h, w, labels, vocab_size)
+    return jnp.where(labels >= 0, lse - ll, 0.0)

@@ -1,0 +1,304 @@
+"""Pallas TPU kernels for fused LM-head cross-entropy (logits -> loss/grad).
+
+The head path ``loss = xent(h @ w, labels)`` is the activation-memory
+hot-spot of a training step: the (tokens, vocab) logit matrix is V/D times
+bigger than the hidden states that produce it. The jnp path bounds it by
+chunking tokens (``models.model.lm_loss``) but still materializes a
+(chunk, V) f32 logit block in HBM per scan step — and the backward scan
+re-materializes it and streams a (D, V) f32 dW accumulator through HBM on
+*every* chunk. These kernels never let logits leave VMEM:
+
+  * ``xent_fwd`` — grid (token tiles, vocab tiles), vocab innermost. Each
+    step computes one (bn, bv) logit tile on the MXU and folds it into a
+    running online-logsumexp (max + scaled sum, flash-attention style) and
+    the label-logit accumulator held in VMEM scratch; per-token ``lse`` and
+    ``ll`` (each (N, 1) f32 — noise next to the matrices) are emitted once
+    at the last vocab tile. Peak logit storage is one (bn, bv) VMEM tile,
+    independent of V and S.
+  * ``xent_bwd_dh`` — same tiling; recomputes the logit tile, forms
+    ``dlogits = (softmax - onehot(label)) * g`` in registers and
+    accumulates ``dlogits @ w_tile^T`` into a (bn, D) VMEM scratch, emitted
+    once per token tile. dlogits never exists beyond a (bn, bv) tile.
+  * ``xent_bwd_dw`` — transposed grid (vocab tiles outer, token tiles
+    inner): the (D, bv) dW tile stays resident in scratch while all token
+    tiles stream by, accumulating ``h_tile^T @ dlogits``; one dW write per
+    vocab tile (vs the scan's read+write of the full f32 dW per chunk).
+
+Masking folds three boundaries into the tile iota, mirroring the colnorm
+kernels' remainder handling (out-of-bounds block regions are undefined —
+NaN in interpret mode — and 0*NaN = NaN, so *both* operands of every
+contraction are zeroed on padded positions):
+
+  * padded vocab: global column id ``col_offset + j*bv + iota`` >=
+    ``vocab_size`` contributes neither to the logsumexp nor to dW, and w is
+    zeroed there before the dH contraction;
+  * remainder vocab tiles (local V % bv): lanes past the local w width are
+    undefined memory whose *global* ids can still be < ``vocab_size`` on a
+    non-last vocab shard, so validity is the conjunction of the local
+    bound and the global one (see ``_col_masks``) — and the label one-hot
+    uses the same mask so a label owned by another shard cannot match an
+    undefined local lane carrying its global id;
+  * remainder token tiles (N % bn): forward/dH rows are independent and
+    clipped on write; dW zeroes h rows and dlogits rows past N before the
+    token contraction.
+
+``col_offset`` is a traced SMEM scalar: under a vocab-sharded mesh the
+dispatch layer passes ``shard_index * local_V`` so labels (global ids)
+resolve against the local w shard; the per-shard (lse, ll) pair is then
+combined with ``pmax``/``psum`` outside (see ``dispatch.xent_loss``).
+
+Masked labels (-1) hit no column (col >= 0 always), so ``ll`` is 0 and the
+wrapper's validity mask is the only special-casing they need. D is carried
+whole per block (blocks are exact on D, never padded); ``_pick_blocks``
+shrinks the token/vocab tile instead when bn*D or D*bv would crowd VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30  # finite -inf stand-in: keeps the running max
+#                            NaN-free when a tile (or a whole vocab shard)
+#                            is entirely padding
+
+
+def _pick_blocks(n: int, d: int, v: int, block=None, *, el_bytes: int = 4,
+                 row_acc: bool = False):
+    """(bn, bv) tile for one kernel, clamped to the (padded) problem.
+
+    The token tile bn is the HBM-reuse lever: w streams through HBM once
+    per token tile (forward/dH), so bn grows until the (bn, D) h block —
+    or, when ``row_acc``, the (bn, D) f32 dH accumulator — reaches ~4 MiB.
+    bv likewise grows until the (D, bv) w tile / f32 dW accumulator
+    reaches ~4 MiB, then shrinks while the (bn, bv) f32 logit tile
+    exceeds ~8 MiB. Caps at 2048 (diminishing reuse returns), floors at
+    the (32, 128) hardware tiling.
+    """
+    if block is not None:
+        bn, bv = block
+    else:
+        bn = (4 << 20) // max(d * (4 if row_acc else el_bytes), 1)
+        bn = max(32, min(2048, bn // 32 * 32))
+        bv = max(128, min(2048, ((4 << 20) // max(d * 4, 1)) // 128 * 128))
+        while bn * bv * 4 > (8 << 20) and bv > 128:
+            bv //= 2
+    bn = min(bn, -(-n // 32) * 32)
+    bv = min(bv, -(-v // 128) * 128)
+    return bn, bv
+
+
+def _col_masks(off, j, bv, v_local, vocab_size, shape, axis):
+    """(global col ids, validity mask) for one vocab tile.
+
+    A lane is valid only if it is inside the **local** w (lcol < v_local —
+    remainder-tile lanes past it are undefined memory whose *global* ids
+    can still be < vocab_size on any non-last vocab shard) AND its global
+    id is a real vocab entry (col < vocab_size — padded-vocab columns).
+    The mask guards the logsumexp/softmax contributions and the label
+    one-hot (a label owned by another shard must not match an undefined
+    local lane that happens to carry its global id).
+    """
+    lcol = jax.lax.broadcasted_iota(jnp.int32, shape, axis) + j * bv
+    col = off + lcol
+    return col, (lcol < v_local) & (col < vocab_size)
+
+
+# --------------------------------------------------------------------------
+# forward: blockwise logits -> online logsumexp + label logit
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(h_ref, w_ref, lab_ref, off_ref, lse_ref, ll_ref,
+                m_acc, s_acc, ll_acc, *, n_v_tiles, bv, v_local, vocab_size):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, _NEG)
+        s_acc[...] = jnp.zeros_like(s_acc)
+        ll_acc[...] = jnp.zeros_like(ll_acc)
+
+    logits = jnp.dot(h_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                            logits.shape, 1)
+    logits = jnp.where(vmask, logits, _NEG)
+    m_new = jnp.maximum(m_acc[...], jnp.max(logits, axis=1, keepdims=True))
+    # explicit mask on the exp: with everything pinned at _NEG the
+    # difference is 0 and exp would contribute 1 per padded column
+    e = jnp.where(vmask, jnp.exp(logits - m_new), 0.0)
+    s_acc[...] = (s_acc[...] * jnp.exp(m_acc[...] - m_new)
+                  + jnp.sum(e, axis=1, keepdims=True))
+    m_acc[...] = m_new
+    ll_acc[...] += jnp.sum(
+        jnp.where((col == lab_ref[...]) & vmask, logits, 0.0),
+        axis=1, keepdims=True)
+
+    @pl.when(j == n_v_tiles - 1)
+    def _emit():
+        lse_ref[...] = m_acc[...] + jnp.log(s_acc[...])
+        ll_ref[...] = ll_acc[...]
+
+
+def xent_fwd(h, w, labels, *, vocab_size: int, col_offset=0, block=None,
+             interpret: bool = True):
+    """Per-token (lse, ll): h (N, D), w (D, V), labels (N,) int32.
+
+    Returns two (N,) f32 vectors: the logsumexp over valid columns and the
+    logit at the label (0 for labels outside [col_offset, col_offset+V) or
+    masked -1 labels). ``loss = lse - ll`` for valid tokens.
+    """
+    n, d = h.shape
+    v = w.shape[1]
+    bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize)
+    grid = (pl.cdiv(n, bn), pl.cdiv(v, bv))
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    tok = pl.BlockSpec((bn, 1), lambda i, j: (i, 0))
+    lse, ll = pl.pallas_call(
+        functools.partial(_fwd_kernel, n_v_tiles=grid[1], bv=bv, v_local=v,
+                          vocab_size=vocab_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+                  tok,
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=[tok, tok],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32)] * 3,
+        interpret=interpret,
+    )(h, w, labels.reshape(n, 1), off)
+    return lse[:, 0], ll[:, 0]
+
+
+# --------------------------------------------------------------------------
+# backward: dH from (softmax - onehot) @ w^T, same tiling as forward
+# --------------------------------------------------------------------------
+
+def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, gl_ref, off_ref, dh_ref,
+               acc_ref, *, n_v_tiles, bv, v_local, vocab_size):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logits = jnp.dot(h_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                            logits.shape, 1)
+    p = jnp.where(vmask, jnp.exp(logits - lse_ref[...]), 0.0)
+    dlog = (p - jnp.where((col == lab_ref[...]) & vmask, 1.0, 0.0)) \
+        * gl_ref[...]
+    # zero w on masked columns: dlog is exactly 0 there, but undefined w
+    # lanes (remainder tiles) would still poison the product (0 * NaN)
+    _, wmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                          (w_ref.shape[0], bv), 1)
+    w_eff = jnp.where(wmask, w_ref[...].astype(jnp.float32), 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        dlog, w_eff, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_v_tiles - 1)
+    def _emit():
+        dh_ref[...] = acc_ref[...].astype(dh_ref.dtype)
+
+
+def xent_bwd_dh(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
+                block=None, interpret: bool = True, out_dtype=jnp.float32):
+    """dH (N, D): gl-weighted (softmax - onehot) contracted with w.
+
+    ``gl`` (N,) f32 is the per-token upstream cotangent (already 0 for
+    masked labels); ``lse`` the forward's (globally combined) logsumexp.
+    Under vocab sharding the result is a partial sum over local columns —
+    the caller psums it over the vocab mesh axes.
+    """
+    n, d = h.shape
+    v = w.shape[1]
+    bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize,
+                          row_acc=True)
+    grid = (pl.cdiv(n, bn), pl.cdiv(v, bv))
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    tok = pl.BlockSpec((bn, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_dh_kernel, n_v_tiles=grid[1], bv=bv, v_local=v,
+                          vocab_size=vocab_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+                  tok, tok, tok,
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bn, d), jnp.float32)],
+        interpret=interpret,
+    )(h, w, labels.reshape(n, 1), lse.reshape(n, 1), gl.reshape(n, 1), off)
+
+
+# --------------------------------------------------------------------------
+# backward: dW tile resident while token tiles stream (transposed grid)
+# --------------------------------------------------------------------------
+
+def _dw_kernel(w_ref, h_ref, lab_ref, lse_ref, gl_ref, off_ref, dw_ref,
+               acc_ref, *, n_t_tiles, bn, bv, v_local, n_tokens, vocab_size):
+    j, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logits = jnp.dot(h_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                            logits.shape, 1)
+    row = i * bn + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    tokmask = row < n_tokens
+    p = jnp.where(vmask & tokmask, jnp.exp(logits - lse_ref[...]), 0.0)
+    # token-remainder rows carry undefined lse/gl; unlike forward/dH the
+    # token axis is contracted here, so both operands are zeroed past N
+    dlog = jnp.where(tokmask,
+                     (p - jnp.where((col == lab_ref[...]) & vmask, 1.0, 0.0))
+                     * gl_ref[...], 0.0)
+    hrow = i * bn + jax.lax.broadcasted_iota(jnp.int32, h_ref.shape, 0)
+    h_eff = jnp.where(hrow < n_tokens, h_ref[...].astype(jnp.float32), 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        h_eff, dlog, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_t_tiles - 1)
+    def _emit():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+
+
+def xent_bwd_dw(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
+                block=None, interpret: bool = True, out_dtype=jnp.float32):
+    """dW (D, V): h^T contracted with the gl-weighted (softmax - onehot).
+
+    Under batch sharding the result is a partial sum over local tokens —
+    the caller psums it over the token mesh axes.
+    """
+    n, d = h.shape
+    v = w.shape[1]
+    bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize)
+    grid = (pl.cdiv(v, bv), pl.cdiv(n, bn))
+    off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
+    tok = pl.BlockSpec((bn, 1), lambda j, i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, n_t_tiles=grid[1], bn=bn, bv=bv,
+                          v_local=v, n_tokens=n, vocab_size=vocab_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((d, bv), lambda j, i: (0, j)),
+                  pl.BlockSpec((bn, d), lambda j, i: (i, 0)),
+                  tok, tok, tok,
+                  pl.BlockSpec((1, 1), lambda j, i: (0, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((d, bv), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, v), out_dtype),
+        scratch_shapes=[pltpu.VMEM((d, bv), jnp.float32)],
+        interpret=interpret,
+    )(w, h, labels.reshape(n, 1), lse.reshape(n, 1), gl.reshape(n, 1), off)

@@ -10,6 +10,7 @@ Parameter tree layout (labels drive the SCALE optimizer branches):
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -184,6 +185,31 @@ def _mask_pad_vocab(logits, cfg: ModelConfig):
     return jnp.where(idx < cfg.vocab_size, logits, neg)
 
 
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= min(target, S).
+
+    Computed directly over the divisor pairs (O(sqrt S), shapes are
+    static) instead of decrementing from ``target`` — and *audibly*: a
+    prime or awkward S used to silently degrade to chunk=1, turning the
+    loss scan into a per-token loop with an (S,)-step trace.
+    """
+    target = min(target, S)
+    best, d = 1, 1
+    while d * d <= S:
+        if S % d == 0:
+            for c in (d, S // d):
+                if best < c <= target:
+                    best = c
+        d += 1
+    if best * 2 < target:
+        warnings.warn(
+            f"lm_loss: seq_len={S} has no divisor in ({target // 2}, "
+            f"{target}]; loss chunk shrinks to {best} ({S // best} scan "
+            f"steps). Pick a seq_len with a divisor near loss_chunk="
+            f"{target} to keep the loss scan short.", stacklevel=3)
+    return best
+
+
 def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules):
     """h (B,c,D), w (D,V), labels (B,c) -> (sum_loss, sum_weight)."""
     logits = (h_chunk @ w).astype(jnp.float32)
@@ -197,8 +223,21 @@ def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules):
 
 
 def lm_loss(params, cfg: ModelConfig, hidden, labels,
-            rules: Optional[Rules] = None):
-    """Chunked cross-entropy: logits never materialize for the full sequence.
+            rules: Optional[Rules] = None, mesh=None):
+    """Cross-entropy over the LM head without full-sequence logits.
+
+    Two implementations, selected by ``repro.kernels.dispatch.xent_route``:
+
+    * **fused** (default where covered): the Pallas blockwise kernels
+      behind ``dispatch.xent_loss`` — logits live only as a
+      (token-tile, vocab-tile) VMEM block, the backward emits dH/dW from
+      the same tiles (custom_vjp). ``mesh`` (passed by the trainer, which
+      feature-detects this kwarg) lets the dispatch shard_map the kernels
+      using the head's ("embed", "vocab") and the activations'
+      ("act_batch", ...) logical axes.
+    * **chunked jnp scan** (``REPRO_FUSED=off`` or uncovered
+      shape/sharding): the original reference path — (chunk, V) f32
+      logit blocks per scan step, bitwise-stable across PRs.
 
     labels: (B,S) int32, -1 = masked; audio: (B, n_codebooks, S).
     Returns (mean_loss, total_weight).
@@ -206,9 +245,36 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
     rules = rules or Rules(cfg.rule_overrides)
     w = params["lm_head"]["w"]
     B, S = hidden.shape[0], hidden.shape[1]
-    chunk = min(cfg.loss_chunk, S)
-    while S % chunk:
-        chunk -= 1
+
+    from repro.kernels import dispatch as _kd  # lazy: optional kernel layer
+    head_shape = tuple(w.shape[-2:])
+    h_sh = w_sh = None
+    if mesh is not None:
+        h_sh = rules.sharding(("act_batch", "act_seq", "act_embed"), mesh,
+                              hidden.shape)
+        w_sh = rules.sharding(("embed", "vocab"), mesh, head_shape)
+    # resolve REPRO_FUSED once and thread it through: the branch taken
+    # here and the route inside xent_loss must come from the same read
+    mode = _kd.resolve_mode()
+    route, _ = _kd.xent_route(hidden.shape, head_shape, mode,
+                              h_sharding=h_sh, w_sharding=w_sh)
+    if route == "kernel":
+        def head_loss_sums(wh, labs):
+            losses = _kd.xent_loss(hidden, wh, labs,
+                                   vocab_size=cfg.vocab_size, mode=mode,
+                                   h_sharding=h_sh, w_sharding=w_sh)
+            return jnp.sum(losses), jnp.sum((labs >= 0).astype(jnp.float32))
+
+        if cfg.family == "audio":
+            tot_l = tot_w = 0.0
+            for c in range(cfg.n_codebooks):
+                ls, ws = head_loss_sums(w[c], labels[:, c])
+                tot_l, tot_w = tot_l + ls, tot_w + ws
+            return tot_l / jnp.maximum(tot_w, 1.0), tot_w
+        ls, ws = head_loss_sums(w, labels)
+        return ls / jnp.maximum(ws, 1.0), ws
+
+    chunk = _pick_chunk(S, cfg.loss_chunk)
     nch = S // chunk
 
     def per_head(wh, labs):
@@ -235,11 +301,16 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
 
 
 def loss_fn(params, cfg: ModelConfig, batch: dict, aux_coef: float = 0.01,
-            rules: Optional[Rules] = None):
-    """Full training loss. batch: tokens, labels, [image_embeds]."""
+            rules: Optional[Rules] = None, mesh=None):
+    """Full training loss. batch: tokens, labels, [image_embeds].
+
+    ``mesh`` is forwarded to :func:`lm_loss` for the mesh-aware fused
+    cross-entropy; callers (the trainer) feature-detect this kwarg.
+    """
     hidden, _, aux = forward(params, cfg, batch["tokens"],
                              image_embeds=batch.get("image_embeds"),
                              mode="train", rules=rules)
-    loss, weight = lm_loss(params, cfg, hidden, batch["labels"], rules=rules)
+    loss, weight = lm_loss(params, cfg, hidden, batch["labels"], rules=rules,
+                           mesh=mesh)
     total = loss + aux_coef * aux
     return total, {"loss": loss, "aux": aux, "weight": weight}

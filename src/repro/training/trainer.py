@@ -61,6 +61,9 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     the model's logical axes) is passed to ``tx.update_params`` so the
     fused kernels shard_map over the mesh and psum their norm reductions.
     Optimizers without a ``shardings`` kwarg simply don't receive it.
+    The mesh is also handed to the loss (``loss_fn(..., mesh=...)``,
+    feature-detected the same way) so the fused LM-head cross-entropy can
+    shard_map its kernels over the head's vocab/batch axes.
 
     When the optimizer's ``update_params`` accepts ``grad_scale``, global-
     norm clipping is folded into the parameter write (the clip factor
@@ -93,8 +96,15 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     else:
         fuse_clip = False
 
+    # the fused-loss analog of the update_params feature-detection: only
+    # pass the mesh to losses that know what to do with it
+    loss_kwargs = {}
+    if mesh is not None and "mesh" in inspect.signature(loss_fn).parameters:
+        loss_kwargs["mesh"] = mesh
+
     def loss_of(params, mb):
-        return loss_fn(params, cfg, mb, aux_coef=aux_coef, rules=rules)
+        return loss_fn(params, cfg, mb, aux_coef=aux_coef, rules=rules,
+                       **loss_kwargs)
 
     grad_fn = jax.value_and_grad(loss_of, has_aux=True)
 
@@ -175,11 +185,16 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     return train_step
 
 
-def make_eval_step(cfg, rules: Optional[Rules] = None):
+def make_eval_step(cfg, rules: Optional[Rules] = None,
+                   mesh: Optional[Mesh] = None):
     rules = rules or Rules(cfg.rule_overrides)
+    loss_kwargs = {}
+    if mesh is not None and "mesh" in inspect.signature(loss_fn).parameters:
+        loss_kwargs["mesh"] = mesh
 
     def eval_step(params, batch):
-        loss, metrics = loss_fn(params, cfg, batch, rules=rules)
+        loss, metrics = loss_fn(params, cfg, batch, rules=rules,
+                                **loss_kwargs)
         return {"loss": metrics["loss"], "perplexity": jnp.exp(metrics["loss"])}
 
     return eval_step

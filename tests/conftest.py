@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# one canonical REPRO_FUSED pin helper (tests force dispatch routes, e.g.
+# 'off' for the jnp reference paths); `python -m pytest` from the repo
+# root — the documented tier-1 command — puts `benchmarks` on sys.path
+from benchmarks.common import repro_fused  # noqa: F401  (re-exported)
 from repro.models import ModelConfig
 
 

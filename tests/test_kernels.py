@@ -115,18 +115,22 @@ def test_registry_covers_every_op():
     dispatch.py without a REGISTRY entry (or vice versa) fails this test.
     """
     public_ops = {"normalize", "norm_update", "momentum_norm",
-                  "momentum_norm_update"}
+                  "momentum_norm_update", "xent_loss"}
     assert set(dispatch.REGISTRY) == public_ops
     th, g, m = _mk((50, 257), jnp.float32, 21)
+    h = jax.random.normal(jax.random.PRNGKey(22), (40, 50))
+    lab = jax.random.randint(jax.random.PRNGKey(23), (40,), -1, 250)
     args = {
-        "normalize": (g,),
-        "norm_update": (th, g, 0.01),
-        "momentum_norm": (m, g, 0.9),
-        "momentum_norm_update": (th, m, g, 0.9, 0.01),
+        "normalize": ((g,), {}),
+        "norm_update": ((th, g, 0.01), {}),
+        "momentum_norm": ((m, g, 0.9), {}),
+        "momentum_norm_update": ((th, m, g, 0.9, 0.01), {}),
+        "xent_loss": ((h, th, lab), {"vocab_size": 250}),
     }
     for op, (fused_fn, ref_fn) in dispatch.REGISTRY.items():
-        out = fused_fn(*args[op])
-        ref = ref_fn(*args[op])
+        a, kw = args[op]
+        out = fused_fn(*a, **kw)
+        ref = ref_fn(*a, **kw)
         out = out if isinstance(out, tuple) else (out,)
         ref = ref if isinstance(ref, tuple) else (ref,)
         for a, b in zip(out, ref):

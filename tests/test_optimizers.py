@@ -233,3 +233,81 @@ def test_update_params_matches_classic_path_bf16_grads(impl):
                     jax.tree_util.tree_leaves(sb)):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "fused"])
+def test_scale_bf16_momentum_state_and_parity(impl):
+    """momentum_dtype="bfloat16": mu stored bf16 on momentum groups only,
+    state aval is an eval_shape fixed point through both entry points, and
+    the trajectory tracks the f32-momentum run within bf16 rounding.
+    Cast-on-read/write semantics: EMA + norm in f32, storage rounded."""
+    params = make_params()
+    grads = make_grads(params)
+    tx = make_optimizer("scale", 1e-2, impl=impl,
+                        momentum_dtype="bfloat16")
+    s0 = tx.init(params)
+    assert s0.mu["lm_head"]["w"].dtype == jnp.bfloat16  # momentum: halved
+    assert s0.mu["bias"]["b"].dtype == jnp.float32      # Adam moments: f32
+    assert s0.mu["layers"]["wq"].shape == (0,)          # stateless: empty
+
+    # only the stored momentum is quantized — the update (normalized
+    # direction) stays in the gradient dtype on every route
+    u0, _ = tx.update(grads, s0, params)
+    assert u0["lm_head"]["w"].dtype == grads["lm_head"]["w"].dtype
+
+    # vectors route to Adam even when listed in momentum_on: init and
+    # update must agree on f32 mu (state-dtype fixed point)
+    tx_v = make_optimizer("scale", 1e-2, impl=impl,
+                          momentum_dtype="bfloat16",
+                          momentum_on=("last", "vector"))
+    sv = tx_v.init(params)
+    assert sv.mu["bias"]["b"].dtype == jnp.float32
+    sv1 = jax.eval_shape(lambda g, s, p: tx_v.update(g, s, p)[1],
+                         grads, sv, params)
+    for a, b in zip(jax.tree_util.tree_leaves(jax.eval_shape(lambda: sv)),
+                    jax.tree_util.tree_leaves(sv1)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+    # fixed point: update and update_params preserve every state aval
+    for step in (lambda g, s, p: tx.update(g, s, p)[1],
+                 lambda g, s, p: tx.update_params(g, s, p)[1]):
+        s1 = jax.eval_shape(step, grads, s0, params)
+        assert (jax.tree_util.tree_structure(jax.eval_shape(lambda: s0))
+                == jax.tree_util.tree_structure(s1))
+        for a, b in zip(jax.tree_util.tree_leaves(s0),
+                        jax.tree_util.tree_leaves(s1)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+    # quality: bf16 momentum tracks the f32 run within rounding tolerance
+    tx32 = make_optimizer("scale", 1e-2, impl=impl)
+    p16, s16 = params, tx.init(params)
+    p32, s32 = params, tx32.init(params)
+    for _ in range(3):
+        p16, s16 = tx.update_params(grads, s16, p16)
+        p32, s32 = tx32.update_params(grads, s32, p32)
+    for a, b in zip(jax.tree_util.tree_leaves(p16),
+                    jax.tree_util.tree_leaves(p32)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-3)
+
+
+def test_scale_bf16_momentum_fused_matches_jnp():
+    """impl='fused' and impl='jnp' agree under bf16 momentum storage."""
+    params = make_params()
+    grads = make_grads(params)
+    txs = [make_optimizer("scale", 1e-2, impl=i, momentum_dtype="bfloat16")
+           for i in ("jnp", "fused")]
+    states = [tx.init(params) for tx in txs]
+    ps = [params, params]
+    for _ in range(3):
+        for i, tx in enumerate(txs):
+            ps[i], states[i] = tx.update_params(grads, states[i], ps[i])
+    for a, b in zip(jax.tree_util.tree_leaves((ps[0], states[0])),
+                    jax.tree_util.tree_leaves((ps[1], states[1]))):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)
+
+
+def test_scale_momentum_dtype_rejects_unknown():
+    with pytest.raises(ValueError, match="momentum_dtype"):
+        make_optimizer("scale", 1e-2, momentum_dtype="float16")
