@@ -1,9 +1,14 @@
 """Paper Table 4 + Appendix B: optimizer memory for LLaMA 1B/7B, ours vs the
-paper's published numbers, plus the assigned-architecture zoo."""
+paper's published numbers, the assigned-architecture zoo, and the
+tied-embedding rows at 60M (the regime where the head is the largest single
+matrix, so tying shrinks the table the most)."""
 from __future__ import annotations
+
+import dataclasses
 
 from repro.configs import ARCH_IDS, LLAMA_PAPER, get_arch
 from repro.core import memory_report
+from repro.core.labels import LabelRules
 from repro.models import param_shapes
 
 PAPER = {  # (model, method) -> GB from Appendix B
@@ -20,6 +25,27 @@ METHODS = ("sgd", "adam", "muon", "swan", "galore", "fira", "apollo",
            "apollo_mini", "scale")
 
 
+def tied_rows(model: str = "llama-60m"):
+    """weights/state/total for scale + adam with tying off vs on.
+
+    The tied shapes tree has no ``lm_head`` leaf (counted once), and
+    ``LabelRules.tied()`` keeps SCALE's momentum on the tied matrix, so
+    tying saves the head's weight bytes while the optimizer state is
+    unchanged (the momentum moves, it does not disappear).
+    """
+    rows = []
+    for tied in (False, True):
+        cfg = dataclasses.replace(get_arch(model), tie_embeddings=tied)
+        shapes = param_shapes(cfg)
+        rules = LabelRules.tied() if tied else None
+        for m in ("scale", "adam", "sgd"):
+            w, s, t = memory_report(shapes, m, rules=rules).gb()
+            rows.append((f"tied/{model}/{'tied' if tied else 'untied'}/{m}",
+                         None, f"weights={w:.3f}G state={s:.3f}G "
+                               f"total={t:.3f}G"))
+    return rows
+
+
 def run(quick: bool = True):
     rows = []
     for model in ("llama-1b", "llama-7b"):
@@ -31,6 +57,7 @@ def run(quick: bool = True):
                        f"diff={100*(ours-ref)/ref:+.1f}%" if ref
                        else f"ours={ours:.3f}G")
             rows.append((f"table4/{model}/{m}", None, derived))
+    rows += tied_rows()
     if not quick:
         for arch in ARCH_IDS:
             shapes = param_shapes(get_arch(arch))

@@ -104,29 +104,36 @@ def _accounting_rows(heads, chunk):
     return rows
 
 
-def _parity_rows(B=2, S=64, D=64, V=512, VS=500):
-    """Real kernels (interpret oracle off-TPU) vs the full-logit jnp ref."""
+def _parity_rows(B=2, S=64, D=64, V=512, VS=500, tied: bool = False):
+    """Real kernels (interpret oracle off-TPU) vs the full-logit jnp ref.
+
+    ``tied``: exercise the transposed-w variants — w lives in the (V, D)
+    embedding layout, dW must come back in that layout, and the oracle
+    contracts ``w.T``.
+    """
     from repro.kernels import dispatch
     from repro.kernels.xent import ref as xref
 
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     h = jax.random.normal(ks[0], (B, S, D), jnp.float32)
-    w = jax.random.normal(ks[1], (D, V), jnp.float32)
+    w = jax.random.normal(ks[1], (V, D) if tied else (D, V), jnp.float32)
     lab = jax.random.randint(ks[2], (B, S), -1, VS)
     # explicit mode: a user-exported REPRO_FUSED=off must not silently
     # turn this into a reference-vs-reference comparison
     mode = "compiled" if jax.devices()[0].platform == "tpu" else "interpret"
-    assert dispatch.xent_route(h.shape, w.shape, mode)[0] == "kernel"
+    assert dispatch.xent_route(h.shape, w.shape, mode,
+                               transposed=tied)[0] == "kernel"
 
     def f_fused(h, w):
         return jnp.sum(dispatch.xent_loss(h, w, lab, vocab_size=VS,
-                                          mode=mode))
+                                          mode=mode, transposed=tied))
 
     def f_ref(h, w):
-        return jnp.sum(xref.losses(h, w, lab, VS))
+        return jnp.sum(xref.losses(h, w.T if tied else w, lab, VS))
 
     (v1, (dh1, dw1)) = jax.value_and_grad(f_fused, argnums=(0, 1))(h, w)
     (v2, (dh2, dw2)) = jax.value_and_grad(f_ref, argnums=(0, 1))(h, w)
+    assert dw1.shape == w.shape
     errs = {
         "loss": abs(float(v1) - float(v2)) / max(abs(float(v2)), 1e-9),
         "dH": float(jnp.max(jnp.abs(dh1 - dh2))),
@@ -134,7 +141,8 @@ def _parity_rows(B=2, S=64, D=64, V=512, VS=500):
     }
     assert errs["loss"] < 1e-5 and errs["dH"] < 1e-4 and errs["dW"] < 1e-4, \
         errs
-    return [(f"xent/parity_{k}_err", None, f"{e:.2e}")
+    tag = "tied_parity" if tied else "parity"
+    return [(f"xent/{tag}_{k}_err", None, f"{e:.2e}")
             for k, e in errs.items()]
 
 
@@ -196,9 +204,46 @@ def _timing_rows(tiny: bool):
     return rows
 
 
-def run(quick: bool = False):
+def _tied_rows():
+    """Tied-head (transposed-w) kernel smoke: parity + end-to-end lm_loss.
+
+    Keeps the transposed kernels exercised by ``bench-smoke`` (CI passes
+    ``--tied``): the tied lm_loss route must stay on the kernels and match
+    the chunked scan over ``tok_embed.w.T``.
+    """
+    from repro.models import ModelConfig, init_params, lm_loss
+
+    from .common import repro_fused
+
+    rows = _parity_rows(tied=True)
+    cfg = ModelConfig(d_model=32, vocab_size=500, loss_chunk=16,
+                      dtype="float32", tie_embeddings=True)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    lab = jax.random.randint(jax.random.PRNGKey(4), (2, 64), -1,
+                             cfg.vocab_size)
+    # pin the mode and assert the route like _parity_rows: an exported
+    # REPRO_FUSED=off (or a cfg tweak off the coverage matrix) must fail
+    # loudly, not silently compare the scan reference with itself
+    from repro.kernels import dispatch
+    mode = "compiled" if jax.devices()[0].platform == "tpu" else "interpret"
+    assert dispatch.xent_route(
+        tuple(h.shape), (cfg.padded_vocab, cfg.d_model), mode,
+        transposed=True)[0] == "kernel"
+    with repro_fused(mode):
+        l_f = float(lm_loss(params, cfg, h, lab)[0])
+    with repro_fused("off"):
+        l_r = float(lm_loss(params, cfg, h, lab)[0])
+    err = abs(l_f - l_r) / max(abs(l_r), 1e-9)
+    assert err < 1e-5, (l_f, l_r)
+    rows.append(("xent/tied_lm_loss_vs_scan_err", None, f"{err:.2e}"))
+    return rows
+
+
+def run(quick: bool = False, tied: bool = False):
     """``quick`` (the CLI's ``--tiny``) swaps the paper-scale shape sweep
-    for toy shapes and times the interpret oracle — the CI smoke mode."""
+    for toy shapes and times the interpret oracle — the CI smoke mode.
+    ``tied`` adds the transposed-w (tied-embedding head) kernel smoke."""
     tiny = quick
     heads = ({"tiny": dict(B=2, S=64, D=32, V=512)} if tiny else HEADS)
     rows = [("xent/mode", None,
@@ -206,6 +251,8 @@ def run(quick: bool = False):
              f"chunk={CHUNK} be=2 (bf16 h/w)")]
     rows += _accounting_rows(heads, CHUNK)
     rows += _parity_rows()
+    if tied:
+        rows += _tied_rows()
     rows += _timing_rows(tiny)
     return rows
 
@@ -214,4 +261,5 @@ if __name__ == "__main__":
     import sys
 
     from .common import emit, json_arg
-    emit(run(quick="--tiny" in sys.argv), json_path=json_arg(sys.argv))
+    emit(run(quick="--tiny" in sys.argv, tied="--tied" in sys.argv),
+         json_path=json_arg(sys.argv))

@@ -1,10 +1,23 @@
 """Fault-tolerant checkpointing: (optionally zstd-compressed) msgpack shards
-with atomic renames, manifest checksums, latest-k retention, and auto-resume.
+with atomic renames, per-host manifest checksums, a multi-host commit
+barrier, latest-k retention, and auto-resume.
 
 Layout:  <dir>/step_<N>/shard_<host>.mpk.zst (or .mpk when uncompressed)
-+ manifest.json (+ COMMITTED marker written last — a crash mid-save never
-yields a readable-but-corrupt checkpoint, and restore_latest skips
-uncommitted steps).
++ manifest.<host>.json per host + a merged manifest.json (+ COMMITTED
+marker written last — a crash mid-save never yields a
+readable-but-corrupt checkpoint, and restore_latest skips uncommitted
+steps).
+
+Multi-host protocol: each host writes its shard and its **own**
+``manifest.<host>.json`` (atomic rename) — no host ever rewrites another
+host's manifest, which removes the last-manifest-writer-wins race the old
+best-effort merge had. Committing is a **barrier**: the step is renamed
+into place and marked COMMITTED only once per-host manifests for all
+``n_hosts`` are present in the tmp dir, by whichever host observes
+completeness first (racing committers are tolerated — the loser verifies
+the winner's COMMITTED marker). The merged ``manifest.json`` is derived
+from the per-host manifests at commit time (single writer) and kept for
+legacy readers.
 
 ``zstandard`` is an optional dependency: saves default to zstd when the
 module is importable and fall back to uncompressed shards otherwise; a clear
@@ -17,6 +30,8 @@ import json
 import os
 import shutil
 import threading
+import time
+import uuid
 import zlib
 from typing import Any, Optional, Tuple
 
@@ -59,12 +74,152 @@ def _unpack_array(d: dict) -> np.ndarray:
     return np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
 
 
+def _manifest_name(host_id: int) -> str:
+    return f"manifest.{host_id:05d}.json"
+
+
+def _read_json(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None  # missing or partial write from a crashed save
+
+
+def _write_json_atomic(path: str, obj) -> None:
+    # unique part name: racing committers both derive the merged manifest
+    # (identical content) in one shared tmp dir — a common ".part" would
+    # let one writer's rename steal the other's in-flight temp file. The
+    # token must be unique *across hosts* (pid/tid collide between
+    # machines on a shared filesystem), hence uuid.
+    part = f"{path}.part.{uuid.uuid4().hex}"
+    with open(part, "w") as f:
+        json.dump(obj, f)
+    os.replace(part, path)
+
+
+def _adopt_committed(step_dir: str, tmp_dir: str, host_id: int,
+                     n_hosts: int) -> None:
+    """Copy already-committed hosts' shards + manifests into the tmp dir.
+
+    Re-saving a committed step must not destroy the other hosts' shards
+    when the tmp dir is renamed over the step dir. A host's tmp manifest
+    (fresher, in-flight) always wins over its committed one; a tmp shard
+    with no vouching tmp manifest is debris from a crashed save and is
+    overwritten by the committed copy. Legacy committed dirs (merged
+    manifest only) get per-host manifests synthesized from the merged
+    checksums.
+    """
+    for h in range(n_hosts):
+        if h == host_id:
+            continue  # our fresh shard supersedes any committed one
+        if os.path.exists(os.path.join(tmp_dir, _manifest_name(h))):
+            continue  # host h is mid-save into this tmp dir: fresher
+        man = _read_json(os.path.join(step_dir, _manifest_name(h)))
+        if man is None:
+            # legacy layout: carve host h's entries out of the merged one
+            merged = _read_json(os.path.join(step_dir, "manifest.json"))
+            if merged is None:
+                continue
+            checksums = {n: c for n, c in merged.get("checksums", {}).items()
+                         if n.startswith(f"shard_{h:05d}")}
+            if not checksums:
+                continue
+            man = {"step": merged.get("step"), "host": h, "n_hosts": n_hosts,
+                   "compression": merged.get("compression", "none"),
+                   "checksums": checksums}
+        ok = True
+        for name in man.get("checksums", {}):
+            src = os.path.join(step_dir, name)
+            if not os.path.exists(src):
+                ok = False  # manifest lists a shard that never landed
+                continue
+            shutil.copy2(src, os.path.join(tmp_dir, name))
+        if ok:
+            _write_json_atomic(os.path.join(tmp_dir, _manifest_name(h)), man)
+
+
+def _commit(directory: str, step: int, tmp_dir: str, step_dir: str,
+            keep: int) -> None:
+    """Merge per-host manifests, mark COMMITTED, rename into place.
+
+    Tolerates racing committers on the shared tmp dir: if another host
+    renamed it away at any point, success is verified via the winner's
+    COMMITTED marker instead of propagating the lost race. Crucially the
+    rename is attempted *before* any removal of an existing step dir, so a
+    losing committer can never delete the step the winner just committed.
+    """
+    def _won_by_other() -> bool:
+        return (not os.path.exists(tmp_dir)
+                and os.path.exists(os.path.join(step_dir, "COMMITTED")))
+
+    try:
+        checksums, leaves, compression, n_hosts = {}, {}, "none", 1
+        for name in sorted(os.listdir(tmp_dir)):
+            if not (name.startswith("manifest.") and name.endswith(".json")
+                    and name != "manifest.json"):
+                continue
+            man = _read_json(os.path.join(tmp_dir, name))
+            if man is None:
+                continue
+            checksums.update(man.get("checksums", {}))
+            leaves.update(man.get("leaves", {}))
+            compression = man.get("compression", compression)
+            n_hosts = max(n_hosts, man.get("n_hosts", 1))
+        # the merged manifest is written once per committer, from manifests
+        # no other host will ever rewrite — identical content, no race
+        _write_json_atomic(os.path.join(tmp_dir, "manifest.json"),
+                           {"step": step, "n_hosts": n_hosts,
+                            "compression": compression,
+                            "checksums": checksums, "leaves": leaves})
+        with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
+            f.write("ok")
+    except OSError:
+        if _won_by_other():
+            _retain_latest(directory, keep)
+            return
+        raise
+    for attempt in range(100):
+        try:
+            os.replace(tmp_dir, step_dir)
+            break
+        except FileNotFoundError:
+            if _won_by_other():
+                break  # a racing committer renamed our shared tmp dir
+            raise
+        except OSError:
+            # step_dir exists (re-save of a committed step). Remove it and
+            # retry; if a racer steals the rename meanwhile the next
+            # iteration lands in the FileNotFoundError arm above. Never
+            # remove the step after losing the tmp dir — that would delete
+            # the winner's commit.
+            if _won_by_other():
+                break
+            if not os.path.exists(tmp_dir):
+                raise
+            shutil.rmtree(step_dir, ignore_errors=True)
+    else:
+        raise IOError(f"could not commit {step_dir}: rename kept failing")
+    _retain_latest(directory, keep)
+
+
 def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
-         n_hosts: int = 1, keep: int = 3, compression: str = "auto") -> str:
+         n_hosts: int = 1, keep: int = 3, compression: str = "auto",
+         barrier_timeout: float = 0.0) -> str:
     """Atomically save ``tree`` for ``step``. Returns the checkpoint path.
 
     ``compression``: "auto" (zstd when available, else uncompressed),
     "zstd" (required; clear error when the module is missing), or "none".
+
+    Multi-host (``n_hosts > 1``, shared filesystem): this host writes its
+    shard plus its own ``manifest.<host>.json`` and then hits the commit
+    barrier — the step is only renamed into place and marked COMMITTED
+    once all hosts' manifests are present, by whichever host sees
+    completeness first. ``barrier_timeout`` seconds are spent polling for
+    the stragglers; with the default 0 a host that arrives early returns
+    immediately (path not yet committed — the last host to arrive commits
+    for everyone, which is the fast path for sequential test saves and
+    for launchers that already sequence their hosts).
     """
     if compression not in ("auto", "zstd", "none"):
         raise ValueError(f"compression must be auto|zstd|none, got {compression!r}")
@@ -74,11 +229,12 @@ def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
     tmp_dir = step_dir + ".tmp"
     os.makedirs(tmp_dir, exist_ok=True)
     # a crashed earlier save may have left this host's shard (possibly with
-    # a different compression/extension) in the tmp dir; remove only our
-    # own stale files — other hosts may be writing their shards to the same
-    # tmp dir concurrently
+    # a different compression/extension) or manifest in the tmp dir; remove
+    # only our own stale files — other hosts may be writing theirs to the
+    # same tmp dir concurrently
     for name in os.listdir(tmp_dir):
-        if name.startswith(f"shard_{host_id:05d}"):
+        if (name.startswith(f"shard_{host_id:05d}")
+                or name == _manifest_name(host_id)):
             os.remove(os.path.join(tmp_dir, name))
 
     flat = _flatten(tree)
@@ -95,55 +251,33 @@ def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
         f.write(comp)
     os.replace(shard + ".part", shard)
 
-    # the manifest is authoritative for restore, so it must list every
-    # host's shard. Merge checksums from (a) hosts that already wrote into
-    # this tmp dir and (b) a step dir another host already committed — and
-    # adopt (b)'s shard files into our tmp so the rename below doesn't
-    # destroy them. Best-effort for shared-filesystem multi-host saves; a
-    # true multi-host deployment wants per-host manifests (see ROADMAP).
-    checksums = {os.path.basename(shard): zlib.crc32(comp)}
-    manifest_path = os.path.join(tmp_dir, "manifest.json")
-    # tmp-dir entries (fresher, in-flight) take precedence over a previously
-    # committed step's
-    for src_dir in (tmp_dir, step_dir):
-        src_manifest = os.path.join(src_dir, "manifest.json")
-        if not os.path.exists(src_manifest):
-            continue
-        try:
-            with open(src_manifest) as f:
-                old = json.load(f).get("checksums", {})
-        except (OSError, ValueError):
-            continue  # partial write from a crashed save; our entry stands
-        for name, crc in old.items():
-            # skip this host's entries: stale tmp files were removed above
-            # and our fresh shard supersedes any committed one
-            if name.startswith(f"shard_{host_id:05d}") or name in checksums:
-                continue
-            if src_dir is step_dir:
-                src_shard = os.path.join(src_dir, name)
-                if not os.path.exists(src_shard):
-                    continue  # manifest lists a shard that never landed
-                # overwrite any same-named tmp file: reaching here means no
-                # tmp manifest vouched for it, so it is debris from a
-                # crashed save — the committed shard matches this CRC
-                shutil.copy2(src_shard, os.path.join(tmp_dir, name))
-            checksums[name] = crc
-    manifest = {
-        "step": step, "n_hosts": n_hosts,
-        "compression": "zstd" if use_zstd else "none",
-        "checksums": checksums,
-        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
-                   for k, v in flat.items()},
-    }
-    with open(manifest_path, "w") as f:
-        json.dump(manifest, f)
-    with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
-        f.write("ok")
+    # this host's manifest: never touched by any other host (atomic rename
+    # makes readers see either nothing or a complete document)
+    _write_json_atomic(
+        os.path.join(tmp_dir, _manifest_name(host_id)),
+        {"step": step, "host": host_id, "n_hosts": n_hosts,
+         "compression": "zstd" if use_zstd else "none",
+         "checksums": {os.path.basename(shard): zlib.crc32(comp)},
+         "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                    for k, v in flat.items()}})
     if os.path.exists(step_dir):
-        shutil.rmtree(step_dir)
-    os.replace(tmp_dir, step_dir)
+        _adopt_committed(step_dir, tmp_dir, host_id, n_hosts)
 
-    _retain_latest(directory, keep)
+    # commit barrier: rename + COMMITTED only when every host's manifest
+    # is present; the observer of completeness commits for everyone
+    deadline = time.monotonic() + max(barrier_timeout, 0.0)
+    while True:
+        present = all(
+            os.path.exists(os.path.join(tmp_dir, _manifest_name(h)))
+            for h in range(n_hosts))
+        if present:
+            _commit(directory, step, tmp_dir, step_dir, keep)
+            break
+        if os.path.exists(os.path.join(step_dir, "COMMITTED")):
+            break  # another host committed while we polled
+        if time.monotonic() >= deadline:
+            break  # a later host completes the barrier and commits
+        time.sleep(0.05)
     return step_dir
 
 
@@ -171,16 +305,27 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree:
-    """Restore ``step`` into the structure/dtypes of ``like``."""
+    """Restore ``step`` into the structure/dtypes of ``like``.
+
+    A tied/untied mismatch is a hard, named error: restoring a
+    ``tie_embeddings=True`` model (no ``lm_head`` leaves) from an untied
+    checkpoint — or the reverse — raises a ValueError that says which
+    ``lm_head`` entries are extra/missing and why, instead of a bare
+    missing-leaf failure.
+    """
     step_dir = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(step_dir, "manifest.json")) as f:
-        manifest = json.load(f)
+    # per-host manifests are authoritative (no cross-host writer existed);
+    # fall back to the merged manifest for checkpoints from older saves
+    manifest = _read_json(os.path.join(step_dir, _manifest_name(host_id)))
+    if manifest is None:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
     # the manifest names the shard this save actually wrote (extension
     # depends on compression), so it is authoritative over directory listing
     prefix = f"shard_{host_id:05d}"
     names = [n for n in manifest["checksums"] if n.startswith(prefix)]
     if not names:
-        raise IOError(f"no shard for host {host_id} in {step_dir}/manifest.json")
+        raise IOError(f"no shard for host {host_id} in {step_dir} manifests")
     shard = os.path.join(step_dir, names[0])
     with open(shard, "rb") as f:
         comp = f.read()
@@ -198,15 +343,36 @@ def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree
 
     from repro.core.labels import path_str
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    want_keys = [path_str(kp) for kp, _ in leaves_with_path]
+    missing = [k for k in want_keys if k not in flat]
+    if missing:
+        head_missing = [k for k in missing if "lm_head" in k]
+        if head_missing:
+            raise ValueError(
+                f"checkpoint {step_dir} has no {head_missing} leaves: it "
+                "was saved from a tie_embeddings=True model (the head is "
+                "the tied tok_embed). Restore into a tied model "
+                "(tie_embeddings=True), or re-export with an explicit "
+                "lm_head.")
+        raise ValueError(
+            f"checkpoint {step_dir} is missing leaves {missing} required "
+            "by the target tree")
+    extra_head = [k for k in flat if "lm_head" in k and k not in want_keys]
+    if extra_head and not any("lm_head" in k for k in want_keys):
+        raise ValueError(
+            f"checkpoint {step_dir} contains {extra_head} but the target "
+            "tree has no lm_head: the checkpoint was saved from an untied "
+            "model and cannot restore into a tie_embeddings=True model "
+            "(the tied head would silently ignore the trained lm_head). "
+            "Restore into an untied model, or fold lm_head into tok_embed "
+            "explicitly.")
     restored = []
     for kp, leaf in leaves_with_path:
-        key = path_str(kp)
-        if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = flat[key]
+        arr = flat[path_str(kp)]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(
-                f"shape mismatch for {key}: ckpt {arr.shape} vs model {np.shape(leaf)}")
+                f"shape mismatch for {path_str(kp)}: ckpt {arr.shape} vs "
+                f"model {np.shape(leaf)}")
         restored.append(np.asarray(arr).astype(np.asarray(leaf).dtype
                                                 if hasattr(leaf, "dtype") else arr.dtype))
     return jax.tree_util.tree_unflatten(treedef, restored)
@@ -243,8 +409,8 @@ class AsyncSave:
 
 
 def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
-               n_hosts: int = 1, keep: int = 3,
-               compression: str = "auto") -> AsyncSave:
+               n_hosts: int = 1, keep: int = 3, compression: str = "auto",
+               barrier_timeout: float = 0.0) -> AsyncSave:
     """Checkpoint without blocking the training loop.
 
     Device arrays are snapshotted to host memory synchronously (cheap; the
@@ -264,7 +430,8 @@ def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
                 treedef, list(snapshot.values()))
             handle.path = save(directory, step, flat_tree,
                                host_id=host_id, n_hosts=n_hosts, keep=keep,
-                               compression=compression)
+                               compression=compression,
+                               barrier_timeout=barrier_timeout)
         except BaseException as e:  # surfaced on wait()
             handle.error = e
 

@@ -23,6 +23,10 @@ PyTree = Any
 
 LAST_LAYER_PATTERNS = (r"lm_head", r"output_head", r"codebook_head")
 FIRST_LAYER_PATTERNS = (r"tok_embed", r"embed_tokens", r"frame_embed", r"patch_embed")
+# Patterns promoted to ``last`` by LabelRules.tied(): with tie_embeddings the
+# token embedding IS the logit-producing matrix, stored transposed ((V, D)
+# instead of the head's (D, V) use layout).
+TIED_LAST_PATTERNS = (r"tok_embed", r"embed_tokens")
 # Params that are per-layer scales/biases/SSM scalars even when stacked to
 # >=2-D by scan-over-layers. These take the Adam branch (paper Appendix C).
 VECTOR_PATTERNS = (r"norm", r"bias", r"/b[qkv]$", r"A_log", r"dt_bias",
@@ -34,6 +38,18 @@ class LabelRules:
     last: tuple = LAST_LAYER_PATTERNS
     first: tuple = FIRST_LAYER_PATTERNS
     vector: tuple = VECTOR_PATTERNS
+    # Logit-producing matrices stored transposed: (d_out, d_in) = (V, D)
+    # instead of the head's (d_in, d_out) use layout. Matching paths are
+    # labeled ``last`` (ahead of ``first``) and flagged by ``transposed`` so
+    # SCALE can flip its col/row norm kind — the normalization must follow
+    # the *output* dimension, not the storage axis.
+    tied_last: tuple = ()
+
+    @classmethod
+    def tied(cls, tied_last: tuple = TIED_LAST_PATTERNS, **kw) -> "LabelRules":
+        """Rules for a ``tie_embeddings=True`` model: the token embedding is
+        the LM head, so it takes the ``last`` (momentum) branch."""
+        return cls(tied_last=tuple(tied_last), **kw)
 
     def classify(self, path: str, ndim: int) -> str:
         if ndim <= 1:
@@ -41,6 +57,12 @@ class LabelRules:
         for pat in self.vector:
             if re.search(pat, path):
                 return "vector"
+        # tied heads outrank ``first``: with weight tying the embedding IS
+        # the logit-producing matrix (paper: momentum lives on the output
+        # layer because its gradient variance is highest)
+        for pat in self.tied_last:
+            if re.search(pat, path):
+                return "last"
         for pat in self.last:
             if re.search(pat, path):
                 return "last"
@@ -48,6 +70,13 @@ class LabelRules:
             if re.search(pat, path):
                 return "first"
         return "matrix"
+
+    def transposed(self, path: str, ndim: int = 2) -> bool:
+        """True when ``path`` names a matrix stored (d_out, d_in) — a tied
+        head; col/row norm kinds must be flipped for it."""
+        if ndim <= 1:
+            return False
+        return any(re.search(pat, path) for pat in self.tied_last)
 
 
 def path_str(key_path) -> str:
@@ -62,12 +91,44 @@ def path_str(key_path) -> str:
     return "/".join(parts)
 
 
-def label_tree(params: PyTree, rules: LabelRules | None = None) -> PyTree:
-    """Return a pytree of str labels mirroring ``params``."""
+def label_tree(params: PyTree, rules: LabelRules | None = None,
+               require_last: bool = False) -> PyTree:
+    """Return a pytree of str labels mirroring ``params``.
+
+    ``require_last=True`` (used by optimizers whose head branch matters,
+    i.e. SCALE's momentum group): a tree that contains an embedding-like
+    (``first``) matrix but no ``last``-labeled matrix is a hard error. This
+    is exactly the ``tie_embeddings=True`` failure mode — the tied model has
+    no ``lm_head`` leaf, so under the default rules the logit-producing
+    matrix would silently land outside the ``last`` group and the head
+    would train with no momentum and the wrong norm axis.
+    """
     rules = rules or LabelRules()
 
     def f(kp, leaf):
         return rules.classify(path_str(kp), jnp.ndim(leaf))
+
+    labels = jax.tree_util.tree_map_with_path(f, params)
+    if require_last:
+        labs = set(jax.tree_util.tree_leaves(labels))
+        if "first" in labs and "last" not in labs:
+            raise ValueError(
+                "params contain an embedding-like ('first') matrix but no "
+                "logit-producing ('last') matrix matched the label rules. "
+                "For a tie_embeddings=True model the head IS the embedding: "
+                "build the optimizer with rules=LabelRules.tied() so the "
+                "tied matrix takes the 'last' (momentum + output-dim "
+                "normalization) branch. For a custom head name, extend "
+                "LabelRules(last=...).")
+    return labels
+
+
+def transposed_tree(params: PyTree, rules: LabelRules | None = None) -> PyTree:
+    """Bool pytree: True where a leaf is a transposed-storage (tied) head."""
+    rules = rules or LabelRules()
+
+    def f(kp, leaf):
+        return rules.transposed(path_str(kp), jnp.ndim(leaf))
 
     return jax.tree_util.tree_map_with_path(f, params)
 

@@ -4,6 +4,14 @@ Computes weights + optimizer-state bytes analytically from parameter shapes,
 following the paper's estimation protocol: bf16 (2 bytes) per float, counting
 embedding/attention/MLP/head matrices. Used by ``benchmarks/memory_table.py``
 and asserted against the paper's published numbers in ``tests/test_memory.py``.
+
+Tied embeddings: a ``tie_embeddings=True`` shapes tree (from
+``models.param_shapes``) has no ``lm_head`` leaf, so the tied matrix is
+counted **once** in the weight bytes automatically. Pass
+``rules=LabelRules.tied()`` so the state accounting follows the tie too —
+the embedding is then ``last`` and carries SCALE's single momentum buffer
+(without tied rules it would classify ``first`` and the head momentum
+would silently vanish from the table).
 """
 from __future__ import annotations
 

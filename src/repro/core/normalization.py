@@ -127,6 +127,21 @@ def resolve_larger(kind: str, shape) -> str:
     return kind
 
 
+_FLIPPED = {"col": "row", "row": "col"}
+
+
+def flip_kind(kind: str) -> str:
+    """col/row norm kind for a matrix stored *transposed* ((d_out, d_in)).
+
+    A tied LM head lives in the embedding's (V, D) layout, so the paper's
+    column-wise normalization along the output dimension is a **row** norm
+    of the stored matrix. ``larger`` is shape-resolved (transposition flips
+    both the shape and the axis, so it is already invariant) and the
+    elementwise/orthogonalizing kinds (sign/ns/svd) commute with transpose.
+    """
+    return _FLIPPED.get(kind, kind)
+
+
 def normalize(g: jnp.ndarray, kind: str) -> jnp.ndarray:
     try:
         fn = NORMALIZATIONS[kind]

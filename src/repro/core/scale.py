@@ -75,8 +75,8 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .labels import LabelRules, label_tree
-from .normalization import normalize, resolve_larger
+from .labels import LabelRules, label_tree, transposed_tree
+from .normalization import flip_kind, normalize, resolve_larger
 from .optimizers import _adam_leaf, _empty, _lr_at, _zeros, muon_lr_scale
 from .types import GradientTransformation, PyTree, Schedule
 
@@ -124,6 +124,15 @@ def scale(
     through :mod:`repro.kernels.dispatch` (Pallas kernels).
     ``momentum_dtype="bfloat16"`` halves the momentum (LM-head) state with
     cast-on-read/write semantics (see the module docstring).
+
+    Tied embeddings: for a ``tie_embeddings=True`` model pass
+    ``rules=LabelRules.tied()`` — the token embedding is then the ``last``
+    (momentum) group, and because it is stored in the (V, D) embedding
+    layout rather than the head's (D, V) use layout, its col/row norm kind
+    is flipped per leaf (``normalization.flip_kind``) so the normalization
+    still runs along the output (vocab) dimension. A tied param tree handed
+    the untied default rules is a hard error (``label_tree(require_last=
+    True)``): the head would otherwise silently lose its momentum branch.
     """
     rules = rules or LabelRules()
     adam_lr = adam_lr if adam_lr is not None else lr
@@ -145,7 +154,10 @@ def scale(
         return fused and _kd.supported(shape, kind, mode)
 
     def init(params):
-        labels = label_tree(params, rules)
+        # require_last: a tree with an embedding but no 'last' matrix means
+        # a tied model was handed the untied rules — hard error, the head
+        # would silently train with no momentum (see labels.label_tree)
+        labels = label_tree(params, rules, require_last=True)
 
         def mk_mu(lab, p):
             # vector check first: update() routes vectors to Adam (f32
@@ -190,7 +202,7 @@ def scale(
         g.dtype rounding and applies in full f32 — slightly more precise,
         within the parity-test tolerance.
         """
-        labels = label_tree(grads, rules)
+        labels = label_tree(grads, rules, require_last=True)
         count = state.count
         lr_t = _lr_at(lr, count)
         alr_t = _lr_at(adam_lr, count)
@@ -204,7 +216,7 @@ def scale(
             u = u.astype(g.dtype)
             return u if p is None else p + u.astype(p.dtype)
 
-        def leaf(lab, g, m, v, p, sh):
+        def leaf(lab, tr, g, m, v, p, sh):
             # jnp-branch view of the gradient: scaled up front, exactly the
             # op the trainer's clip tree-map used (XLA fuses it — free).
             # Kernel branches instead thread grad_scale INTO the kernels,
@@ -217,6 +229,10 @@ def scale(
                 return emit(-alr_t * upd, gsc, p), m, v
             s = muon_lr_scale(g.shape) if lr_scaling else 1.0
             kind = _norm_kind_for(lab, norm_last, norm_first, norm_rest)
+            if tr:
+                # tied head stored (V, D): the paper's normalization along
+                # the output dimension is a row norm of the storage layout
+                kind = flip_kind(kind)
             lr_eff = lr_t * s
             if lab in momentum_on:
                 if _use_kernel(g.shape, kind, mode):
@@ -251,9 +267,11 @@ def scale(
         n = len(g_leaves)
         flat = treedef.flatten_up_to
         lab_l, mu_l, nu_l = flat(labels), flat(state.mu), flat(state.nu)
+        tr_l = flat(transposed_tree(grads, rules)) if rules.tied_last \
+            else [False] * n
         p_l = flat(params) if params is not None else [None] * n
         sh_l = flat(shardings) if shardings is not None else [None] * n
-        out = [leaf(*args) for args in zip(lab_l, g_leaves, mu_l, nu_l,
+        out = [leaf(*args) for args in zip(lab_l, tr_l, g_leaves, mu_l, nu_l,
                                            p_l, sh_l)]
         result = treedef.unflatten([o[0] for o in out])
         mu = treedef.unflatten([o[1] for o in out])

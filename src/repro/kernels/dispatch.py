@@ -29,6 +29,12 @@ Coverage matrix (``supported`` / ``xent_supported``):
                       head at a time — the audio multi-codebook head
                       dispatches per codebook (its 4-D (B, C, S, D) case
                       never reaches dispatch directly).
+  xent, transposed w  ``transposed=True``: w is a **tied embedding** in
+                      (V, D) storage — blocks index ``w[vocab_tile, d]``,
+                      dW is emitted in (V, D) so the gradient lands on the
+                      embedding, and the shard plan reads the vocab axes
+                      off w's dim 0 (dim 1 — FSDP embed — is gathered).
+                      Same shape/dtype/masking coverage as the (D, V) row.
   ==================  =====================================================
 
 Sharded dispatch (pjit meshes)
@@ -451,21 +457,27 @@ class XentPlan(NamedTuple):
     """Static shard_map recipe for the fused xent.
 
     ``tok_axes``: mesh axes sharding the leading (batch) dim of h/labels.
-    ``voc_axes``: mesh axes sharding w's vocab dim (dim 1). w's embed dim
-    is always gathered inside the shard_map (in_spec ``None``).
+    ``voc_axes``: mesh axes sharding w's vocab dim (dim 1; dim 0 for a
+    transposed/tied w). w's embed dim is always gathered inside the
+    shard_map (in_spec ``None``).
     """
     mesh: Mesh
     tok_axes: tuple
     voc_axes: tuple
 
 
-def xent_supported(h_shape, w_shape, mode: str | None = None) -> bool:
-    """True when (h, w) shapes are covered by the fused xent kernels."""
+def xent_supported(h_shape, w_shape, mode: str | None = None,
+                   transposed: bool = False) -> bool:
+    """True when (h, w) shapes are covered by the fused xent kernels.
+
+    ``transposed``: w is a tied embedding stored (V, D) — the contraction
+    dim is then w's dim 1 instead of dim 0.
+    """
     if (resolve_mode() if mode is None else mode) == "off":
         return False
     if len(h_shape) not in (2, 3) or len(w_shape) != 2:
         return False
-    if h_shape[-1] != w_shape[0]:
+    if h_shape[-1] != w_shape[1 if transposed else 0]:
         return False
     return all(d >= 1 for d in tuple(h_shape) + tuple(w_shape))
 
@@ -479,13 +491,15 @@ def _axes_prod(mesh: Mesh, axes) -> int | None:
     return k
 
 
-def _plan_xent(h_sharding, w_sharding, h_shape, w_shape):
+def _plan_xent(h_sharding, w_sharding, h_shape, w_shape,
+               transposed: bool = False):
     """-> None (single-device) | "ref" | XentPlan.
 
     "ref" for layouts shard_map cannot express exactly: non-NamedSharding,
     mismatched meshes, h sharded on a non-leading dim (seq/embed), or
     token/vocab dims not divisible by their mesh axes. The jnp chunked
-    path partitions those correctly through GSPMD.
+    path partitions those correctly through GSPMD. For a transposed (tied)
+    w the vocab dim is w's dim 0 and the gathered embed dim is dim 1.
     """
     if h_sharding is None and w_sharding is None:
         return None
@@ -499,6 +513,7 @@ def _plan_xent(h_sharding, w_sharding, h_shape, w_shape):
             return "ref"
         mesh = sh.mesh
     from repro.models.sharding import spec_mesh_axes
+    voc_dim = 0 if transposed else 1
     tok_axes = voc_axes = ()
     if h_sharding is not None:
         per = spec_mesh_axes(h_sharding.spec, len(h_shape))
@@ -506,7 +521,7 @@ def _plan_xent(h_sharding, w_sharding, h_shape, w_shape):
             return "ref"  # seq- or embed-sharded hidden: GSPMD handles it
         tok_axes = per[0]
     if w_sharding is not None:
-        voc_axes = spec_mesh_axes(w_sharding.spec, 2)[1]
+        voc_axes = spec_mesh_axes(w_sharding.spec, 2)[voc_dim]
     if not tok_axes and not voc_axes:
         return None  # replicated (or only w's gathered embed dim sharded)
     if set(tok_axes) & set(voc_axes):
@@ -517,38 +532,43 @@ def _plan_xent(h_sharding, w_sharding, h_shape, w_shape):
         return "ref"
     kt = _axes_prod(mesh, tok_axes)
     kv = _axes_prod(mesh, voc_axes)
-    if kt is None or kv is None or h_shape[0] % kt or w_shape[1] % kv:
+    if kt is None or kv is None or h_shape[0] % kt or w_shape[voc_dim] % kv:
         return "ref"
     return XentPlan(mesh, tuple(tok_axes), tuple(voc_axes))
 
 
 def xent_route(h_shape, w_shape, mode: str | None = None, h_sharding=None,
-               w_sharding=None):
+               w_sharding=None, transposed: bool = False):
     """-> ("ref", None) | ("kernel", None | XentPlan).
 
     Callers that must never materialize full logits (the model's loss)
     take their own chunked path on "ref"; ``xent_loss``'s built-in ref is
-    the full-logit test-scale oracle.
+    the full-logit test-scale oracle. ``transposed``: w is the tied (V, D)
+    embedding (see the coverage matrix).
     """
-    if not xent_supported(h_shape, w_shape, mode):
+    if not xent_supported(h_shape, w_shape, mode, transposed):
         return "ref", None
-    plan = _plan_xent(h_sharding, w_sharding, h_shape, w_shape)
+    plan = _plan_xent(h_sharding, w_sharding, h_shape, w_shape, transposed)
     if plan == "ref":
         return "ref", None
     return "kernel", plan
 
 
 @functools.lru_cache(maxsize=None)
-def _xent_fused(vocab_size: int, interp: bool, plan, block):
+def _xent_fused(vocab_size: int, interp: bool, plan, block,
+                transposed: bool = False):
     """Build the custom_vjp'd fused xent for one static configuration.
 
     Cached so repeated traces reuse one custom_vjp object (and its jit
     caches). ``plan`` is an XentPlan or None; ``block`` a (bn, bv) tuple
-    or None.
+    or None; ``transposed`` selects the tied (V, D) w layout — dW then
+    comes back in (V, D), landing directly on the embedding cotangent.
     """
     mesh = plan.mesh if plan is not None else None
     tok_axes = plan.tok_axes if plan is not None else ()
     voc_axes = plan.voc_axes if plan is not None else ()
+    _v_local = (lambda wb: wb.shape[0]) if transposed \
+        else (lambda wb: wb.shape[1])
 
     def _voffset(v_local: int):
         """Global column id of this shard's first w column (0 off-mesh)."""
@@ -563,15 +583,16 @@ def _xent_fused(vocab_size: int, interp: bool, plan, block):
         tok = tuple(tok_axes) or None
         hspec = P(*(tok,) + (None,) * (h_ndim - 1))
         lspec = P(*(tok,) + (None,) * (lab_ndim - 1))
-        wspec = P(None, tuple(voc_axes) or None)
+        voc = tuple(voc_axes) or None
+        wspec = P(voc, None) if transposed else P(None, voc)
         return hspec, wspec, lspec
 
     def _fwd_parts(h, w, labels):
         def body(hb, wb, lab):
             lse, ll = _xk.xent_fwd(
                 hb.reshape(-1, hb.shape[-1]), wb, lab.reshape(-1),
-                vocab_size=vocab_size, col_offset=_voffset(wb.shape[1]),
-                block=block, interpret=interp)
+                vocab_size=vocab_size, col_offset=_voffset(_v_local(wb)),
+                block=block, interpret=interp, transposed=transposed)
             if voc_axes:
                 m = jax.lax.pmax(lse, voc_axes)
                 lse = m + jnp.log(jax.lax.psum(jnp.exp(lse - m), voc_axes))
@@ -591,7 +612,8 @@ def _xent_fused(vocab_size: int, interp: bool, plan, block):
             args = (h2, wb, lab.reshape(-1), lse_.reshape(-1),
                     gl_.reshape(-1))
             kw = dict(vocab_size=vocab_size, block=block, interpret=interp,
-                      col_offset=_voffset(wb.shape[1]))
+                      col_offset=_voffset(_v_local(wb)),
+                      transposed=transposed)
             # partial sums psum in f32, then round to the cotangent dtype
             dh = _xk.xent_bwd_dh(
                 *args, **kw,
@@ -632,28 +654,37 @@ def _xent_fused(vocab_size: int, interp: bool, plan, block):
     return fused
 
 
-def _xent_ref(h, w, labels, *, vocab_size: int):
-    """Full-logit jnp oracle (test scale; see ``xent_route``)."""
+def _xent_ref(h, w, labels, *, vocab_size: int, transposed: bool = False):
+    """Full-logit jnp oracle (test scale; see ``xent_route``).
+
+    The transpose of a tied w is lazy (fused into the dot); grads flow
+    back through it, so dW arrives in the (V, D) storage layout here too.
+    """
+    if transposed:
+        w = jnp.swapaxes(w, -1, -2)
     return _xref.losses(h, w, labels, vocab_size)
 
 
 def xent_loss(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray, *,
               vocab_size: int, mode: str | None = None, h_sharding=None,
-              w_sharding=None, block=None):
+              w_sharding=None, block=None, transposed: bool = False):
     """Fused per-token LM-head cross-entropy (custom_vjp, see module doc).
 
-    h (..., D), w (D, V), labels h.shape[:-1] int32 (-1 = masked).
+    h (..., D), w (D, V) — or the tied (V, D) embedding with
+    ``transposed=True`` — labels h.shape[:-1] int32 (-1 = masked).
     Returns f32 losses of labels.shape; masked tokens are 0 in both the
     value and the (h, w) gradients. Padded vocab columns (>= vocab_size)
-    never enter the logsumexp.
+    never enter the logsumexp. dW always matches w's own layout.
     """
     mode = resolve_mode() if mode is None else mode
-    route, plan = xent_route(h.shape, w.shape, mode, h_sharding, w_sharding)
+    route, plan = xent_route(h.shape, w.shape, mode, h_sharding, w_sharding,
+                             transposed)
     if route == "ref":
-        return _xent_ref(h, w, labels, vocab_size=vocab_size)
+        return _xent_ref(h, w, labels, vocab_size=vocab_size,
+                         transposed=transposed)
     return _xent_fused(vocab_size, use_interpret(mode), plan,
-                       tuple(block) if block is not None else None)(
-                           h, w, labels)
+                       tuple(block) if block is not None else None,
+                       transposed)(h, w, labels)
 
 
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate

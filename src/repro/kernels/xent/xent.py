@@ -51,6 +51,15 @@ Masked labels (-1) hit no column (col >= 0 always), so ``ll`` is 0 and the
 wrapper's validity mask is the only special-casing they need. D is carried
 whole per block (blocks are exact on D, never padded); ``_pick_blocks``
 shrinks the token/vocab tile instead when bn*D or D*bv would crowd VMEM.
+
+Transposed-w variants (``transposed=True`` on every entry point): the head
+is a **tied embedding** stored (V, D) instead of the use layout (D, V).
+Blocks then index ``w[vocab_tile, d]`` — the logit tile is the same
+(bn, bv) MXU contraction with w's dims swapped, the column masks apply to
+w's *rows*, and ``xent_bwd_dw`` emits dW in (V, D) layout so the gradient
+lands directly on the embedding without a transpose pass. Tile sizes,
+masking and the online-logsumexp recurrence are identical (one code path,
+the ``wt`` static flag only swaps the w-side indexing).
 """
 from __future__ import annotations
 
@@ -91,6 +100,32 @@ def _pick_blocks(n: int, d: int, v: int, block=None, *, el_bytes: int = 4,
     return bn, bv
 
 
+def _logit_tile(h_ref, w_ref, wt: bool):
+    """(bn, bv) f32 logit tile; ``wt`` statically selects the w layout.
+
+    Untied: w block (d, bv), plain ``h @ w``. Transposed (tied): w block
+    (bv, d), contraction over each side's d dim — the same MXU shape, the
+    systolic array just streams w row-major.
+    """
+    if wt:
+        return jax.lax.dot_general(h_ref[...], w_ref[...],
+                                   (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    return jnp.dot(h_ref[...], w_ref[...],
+                   preferred_element_type=jnp.float32)
+
+
+def _w_spec(d, bv, wt: bool, transpose_grid: bool = False):
+    """BlockSpec for the w operand: (d, bv) tiles or (bv, d) when ``wt``."""
+    if transpose_grid:  # dW grid is (vocab, token): j is program_id(0)
+        if wt:
+            return pl.BlockSpec((bv, d), lambda j, i: (j, 0))
+        return pl.BlockSpec((d, bv), lambda j, i: (0, j))
+    if wt:
+        return pl.BlockSpec((bv, d), lambda i, j: (j, 0))
+    return pl.BlockSpec((d, bv), lambda i, j: (0, j))
+
+
 def _col_masks(off, j, bv, v_local, vocab_size, shape, axis):
     """(global col ids, validity mask) for one vocab tile.
 
@@ -112,7 +147,8 @@ def _col_masks(off, j, bv, v_local, vocab_size, shape, axis):
 # --------------------------------------------------------------------------
 
 def _fwd_kernel(h_ref, w_ref, lab_ref, off_ref, lse_ref, ll_ref,
-                m_acc, s_acc, ll_acc, *, n_v_tiles, bv, v_local, vocab_size):
+                m_acc, s_acc, ll_acc, *, n_v_tiles, bv, v_local, vocab_size,
+                wt):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -121,8 +157,7 @@ def _fwd_kernel(h_ref, w_ref, lab_ref, off_ref, lse_ref, ll_ref,
         s_acc[...] = jnp.zeros_like(s_acc)
         ll_acc[...] = jnp.zeros_like(ll_acc)
 
-    logits = jnp.dot(h_ref[...], w_ref[...],
-                     preferred_element_type=jnp.float32)
+    logits = _logit_tile(h_ref, w_ref, wt)
     col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
                             logits.shape, 1)
     logits = jnp.where(vmask, logits, _NEG)
@@ -144,25 +179,26 @@ def _fwd_kernel(h_ref, w_ref, lab_ref, off_ref, lse_ref, ll_ref,
 
 
 def xent_fwd(h, w, labels, *, vocab_size: int, col_offset=0, block=None,
-             interpret: bool = True):
-    """Per-token (lse, ll): h (N, D), w (D, V), labels (N,) int32.
+             interpret: bool = True, transposed: bool = False):
+    """Per-token (lse, ll): h (N, D), w (D, V) — or (V, D) when
+    ``transposed`` (tied embedding head) — labels (N,) int32.
 
     Returns two (N,) f32 vectors: the logsumexp over valid columns and the
     logit at the label (0 for labels outside [col_offset, col_offset+V) or
     masked -1 labels). ``loss = lse - ll`` for valid tokens.
     """
     n, d = h.shape
-    v = w.shape[1]
+    v = w.shape[0] if transposed else w.shape[1]
     bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize)
     grid = (pl.cdiv(n, bn), pl.cdiv(v, bv))
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     tok = pl.BlockSpec((bn, 1), lambda i, j: (i, 0))
     lse, ll = pl.pallas_call(
         functools.partial(_fwd_kernel, n_v_tiles=grid[1], bv=bv, v_local=v,
-                          vocab_size=vocab_size),
+                          vocab_size=vocab_size, wt=transposed),
         grid=grid,
         in_specs=[pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+                  _w_spec(d, bv, transposed),
                   tok,
                   pl.BlockSpec((1, 1), lambda i, j: (0, 0),
                                memory_space=pltpu.SMEM)],
@@ -180,28 +216,34 @@ def xent_fwd(h, w, labels, *, vocab_size: int, col_offset=0, block=None,
 # --------------------------------------------------------------------------
 
 def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, gl_ref, off_ref, dh_ref,
-               acc_ref, *, n_v_tiles, bv, v_local, vocab_size):
+               acc_ref, *, n_v_tiles, bv, v_local, vocab_size, wt):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    logits = jnp.dot(h_ref[...], w_ref[...],
-                     preferred_element_type=jnp.float32)
+    logits = _logit_tile(h_ref, w_ref, wt)
     col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
                             logits.shape, 1)
     p = jnp.where(vmask, jnp.exp(logits - lse_ref[...]), 0.0)
     dlog = (p - jnp.where((col == lab_ref[...]) & vmask, 1.0, 0.0)) \
         * gl_ref[...]
     # zero w on masked columns: dlog is exactly 0 there, but undefined w
-    # lanes (remainder tiles) would still poison the product (0 * NaN)
-    _, wmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
-                          (w_ref.shape[0], bv), 1)
-    w_eff = jnp.where(wmask, w_ref[...].astype(jnp.float32), 0.0)
+    # lanes (remainder tiles) would still poison the product (0 * NaN).
+    # Transposed layout: the masked vocab ids run along w's *rows*.
+    if wt:
+        _, wmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                              (bv, w_ref.shape[1]), 0)
+        w_eff = jnp.where(wmask, w_ref[...].astype(jnp.float32), 0.0)
+        contract = (((1,), (0,)), ((), ()))
+    else:
+        _, wmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
+                              (w_ref.shape[0], bv), 1)
+        w_eff = jnp.where(wmask, w_ref[...].astype(jnp.float32), 0.0)
+        contract = (((1,), (1,)), ((), ()))
     acc_ref[...] += jax.lax.dot_general(
-        dlog, w_eff, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        dlog, w_eff, contract, preferred_element_type=jnp.float32)
 
     @pl.when(j == n_v_tiles - 1)
     def _emit():
@@ -209,16 +251,18 @@ def _dh_kernel(h_ref, w_ref, lab_ref, lse_ref, gl_ref, off_ref, dh_ref,
 
 
 def xent_bwd_dh(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
-                block=None, interpret: bool = True, out_dtype=jnp.float32):
+                block=None, interpret: bool = True, out_dtype=jnp.float32,
+                transposed: bool = False):
     """dH (N, D): gl-weighted (softmax - onehot) contracted with w.
 
     ``gl`` (N,) f32 is the per-token upstream cotangent (already 0 for
     masked labels); ``lse`` the forward's (globally combined) logsumexp.
     Under vocab sharding the result is a partial sum over local columns —
-    the caller psums it over the vocab mesh axes.
+    the caller psums it over the vocab mesh axes. ``transposed``: w is the
+    tied (V, D) embedding.
     """
     n, d = h.shape
-    v = w.shape[1]
+    v = w.shape[0] if transposed else w.shape[1]
     bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize,
                           row_acc=True)
     grid = (pl.cdiv(n, bn), pl.cdiv(v, bv))
@@ -226,10 +270,10 @@ def xent_bwd_dh(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
     tok = pl.BlockSpec((bn, 1), lambda i, j: (i, 0))
     return pl.pallas_call(
         functools.partial(_dh_kernel, n_v_tiles=grid[1], bv=bv, v_local=v,
-                          vocab_size=vocab_size),
+                          vocab_size=vocab_size, wt=transposed),
         grid=grid,
         in_specs=[pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+                  _w_spec(d, bv, transposed),
                   tok, tok, tok,
                   pl.BlockSpec((1, 1), lambda i, j: (0, 0),
                                memory_space=pltpu.SMEM)],
@@ -245,15 +289,15 @@ def xent_bwd_dh(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
 # --------------------------------------------------------------------------
 
 def _dw_kernel(w_ref, h_ref, lab_ref, lse_ref, gl_ref, off_ref, dw_ref,
-               acc_ref, *, n_t_tiles, bn, bv, v_local, n_tokens, vocab_size):
+               acc_ref, *, n_t_tiles, bn, bv, v_local, n_tokens, vocab_size,
+               wt):
     j, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    logits = jnp.dot(h_ref[...], w_ref[...],
-                     preferred_element_type=jnp.float32)
+    logits = _logit_tile(h_ref, w_ref, wt)
     col, vmask = _col_masks(off_ref[0, 0], j, bv, v_local, vocab_size,
                             logits.shape, 1)
     row = i * bn + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
@@ -266,9 +310,16 @@ def _dw_kernel(w_ref, h_ref, lab_ref, lse_ref, gl_ref, off_ref, dw_ref,
                      * gl_ref[...], 0.0)
     hrow = i * bn + jax.lax.broadcasted_iota(jnp.int32, h_ref.shape, 0)
     h_eff = jnp.where(hrow < n_tokens, h_ref[...].astype(jnp.float32), 0.0)
-    acc_ref[...] += jax.lax.dot_general(
-        h_eff, dlog, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    if wt:
+        # (V, D)-layout accumulator: dW[v, :] = sum_n dlog[n, v] * h[n, :]
+        # — invalid vocab lanes have dlog exactly 0, so their rows stay 0
+        acc_ref[...] += jax.lax.dot_general(
+            dlog, h_eff, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            h_eff, dlog, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(i == n_t_tiles - 1)
     def _emit():
@@ -276,29 +327,36 @@ def _dw_kernel(w_ref, h_ref, lab_ref, lse_ref, gl_ref, off_ref, dw_ref,
 
 
 def xent_bwd_dw(h, w, labels, lse, gl, *, vocab_size: int, col_offset=0,
-                block=None, interpret: bool = True, out_dtype=jnp.float32):
-    """dW (D, V): h^T contracted with the gl-weighted (softmax - onehot).
+                block=None, interpret: bool = True, out_dtype=jnp.float32,
+                transposed: bool = False):
+    """dW: h^T contracted with the gl-weighted (softmax - onehot).
 
+    Emitted in w's own layout — (D, V), or (V, D) when ``transposed`` so
+    the tied head's gradient lands directly on the embedding storage.
     Under batch sharding the result is a partial sum over local tokens —
     the caller psums it over the token mesh axes.
     """
     n, d = h.shape
-    v = w.shape[1]
+    v = w.shape[0] if transposed else w.shape[1]
     bn, bv = _pick_blocks(n, d, v, block, el_bytes=h.dtype.itemsize)
     grid = (pl.cdiv(v, bv), pl.cdiv(n, bn))
     off = jnp.asarray(col_offset, jnp.int32).reshape(1, 1)
     tok = pl.BlockSpec((bn, 1), lambda j, i: (i, 0))
+    wspec = _w_spec(d, bv, transposed, transpose_grid=True)
     return pl.pallas_call(
         functools.partial(_dw_kernel, n_t_tiles=grid[1], bn=bn, bv=bv,
-                          v_local=v, n_tokens=n, vocab_size=vocab_size),
+                          v_local=v, n_tokens=n, vocab_size=vocab_size,
+                          wt=transposed),
         grid=grid,
-        in_specs=[pl.BlockSpec((d, bv), lambda j, i: (0, j)),
+        in_specs=[wspec,
                   pl.BlockSpec((bn, d), lambda j, i: (i, 0)),
                   tok, tok, tok,
                   pl.BlockSpec((1, 1), lambda j, i: (0, 0),
                                memory_space=pltpu.SMEM)],
-        out_specs=pl.BlockSpec((d, bv), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((d, v), out_dtype),
-        scratch_shapes=[pltpu.VMEM((d, bv), jnp.float32)],
+        out_specs=wspec,
+        out_shape=jax.ShapeDtypeStruct((v, d) if transposed else (d, v),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((bv, d) if transposed else (d, bv),
+                                   jnp.float32)],
         interpret=interpret,
     )(w, h, labels.reshape(n, 1), lse.reshape(n, 1), gl.reshape(n, 1), off)

@@ -36,7 +36,25 @@ def build(args):
     cfg.loss_chunk = min(cfg.loss_chunk, args.seq)
     if args.dtype:
         cfg.dtype = args.dtype
+    if getattr(args, "tie_embeddings", False):
+        cfg.tie_embeddings = True
     sched = linear_warmup_cosine(args.lr, args.steps)
+    if cfg.tie_embeddings:
+        # feature-detect rather than enumerate names (like the trainer's
+        # shardings/grad_scale detection): any optimizer whose factory
+        # takes LabelRules gets the tied embedding routed to the 'last'
+        # group — scale would otherwise hard-error (a tied tree has no
+        # lm_head to carry the momentum). Optimizers without a rules
+        # kwarg treat every matrix alike, so there is nothing to route;
+        # note only scale flips its col/row kind for the (V, D) storage —
+        # the fixed-kind sgd_*norm ablations normalize along the storage
+        # axis as defined.
+        from repro.core.labels import LabelRules
+        try:
+            return cfg, make_optimizer(args.optimizer, sched,
+                                       rules=LabelRules.tied())
+        except TypeError:
+            pass  # factory has no rules kwarg
     tx = make_optimizer(args.optimizer, sched)
     return cfg, tx
 
@@ -54,6 +72,11 @@ def main(argv=None):
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--dtype", default="")
+    ap.add_argument("--tie-embeddings", dest="tie_embeddings",
+                    action="store_true",
+                    help="tie the LM head to the token embedding (no "
+                         "lm_head params; SCALE momentum moves to the "
+                         "tied matrix)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)

@@ -1,13 +1,13 @@
 """repro.models — the architecture zoo (dense / MoE / SSM / hybrid / VLM / audio)."""
 from .config import ModelConfig
-from .model import (cache_logical_axes, count_params, forward, init_cache,
-                    init_params, lm_loss, logits_from_hidden, loss_fn,
-                    model_spec, param_logical_axes, param_shapes)
+from .model import (cache_logical_axes, count_params, forward, head_weight,
+                    init_cache, init_params, lm_loss, logits_from_hidden,
+                    loss_fn, model_spec, param_logical_axes, param_shapes)
 from .sharding import DEFAULT_RULES, Rules, shard, tree_shardings
 
 __all__ = [
     "ModelConfig", "cache_logical_axes", "count_params", "forward",
-    "init_cache", "init_params", "lm_loss", "logits_from_hidden", "loss_fn",
-    "model_spec", "param_logical_axes", "param_shapes", "DEFAULT_RULES",
-    "Rules", "shard", "tree_shardings",
+    "head_weight", "init_cache", "init_params", "lm_loss",
+    "logits_from_hidden", "loss_fn", "model_spec", "param_logical_axes",
+    "param_shapes", "DEFAULT_RULES", "Rules", "shard", "tree_shardings",
 ]

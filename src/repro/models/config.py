@@ -70,6 +70,9 @@ class ModelConfig:
 
     rope_theta: float = 10000.0
     rms_eps: float = 1e-5
+    # Weight tying: the param tree has no lm_head; tok_embed.w ((V, D), or
+    # (C, V, D) audio) doubles as the head read transposed. Optimizers that
+    # special-case the head must use LabelRules.tied() (see models.model).
     tie_embeddings: bool = False
     pos_embed: str = "rope"    # rope | learned  (gpt2-style)
     max_position: int = 4096   # learned-pos table size

@@ -6,6 +6,13 @@ Parameter tree layout (labels drive the SCALE optimizer branches):
      "segments": {"seg<i>_<kind>": {...stacked super-block params...}},
      "final_norm": {"s"},
      "lm_head": {"w"}}                    # 'last' group (momentum)
+
+With ``cfg.tie_embeddings`` the ``lm_head`` entry does not exist: the head
+is ``tok_embed.w`` read transposed ((V, D) storage, (D, V) use; audio:
+(C, V, D) vs (C, D, V)). :func:`head_weight` is the single accessor — the
+serving/loss paths either fold the transpose into their contraction or
+dispatch the transposed-w fused kernels, and the optimizer must label the
+tied matrix ``last`` (``LabelRules.tied()``) so it keeps head momentum.
 """
 from __future__ import annotations
 
@@ -54,8 +61,10 @@ def model_spec(cfg: ModelConfig) -> dict:
         "tok_embed": _embed_spec(cfg),
         "segments": segs,
         "final_norm": {"s": L.Spec((cfg.d_model,), ("norm",), "ones")},
-        "lm_head": _head_spec(cfg),
     }
+    if not cfg.tie_embeddings:
+        # tied models have no separate head: tok_embed.w is read transposed
+        out["lm_head"] = _head_spec(cfg)
     if cfg.pos_embed == "learned":
         out["pos_embed"] = {"w": L.Spec((cfg.max_position, cfg.d_model),
                                         (None, "embed"))}
@@ -94,7 +103,9 @@ def init_params(key, cfg: ModelConfig) -> dict:
     keys = jax.random.split(key, 3 + len(cfg.segments))
     flat["tok_embed"] = L.init_from_spec(keys[0], spec["tok_embed"], dtype)
     flat["final_norm"] = L.init_from_spec(keys[1], spec["final_norm"], dtype)
-    flat["lm_head"] = L.init_from_spec(keys[2], spec["lm_head"], dtype)
+    if "lm_head" in spec:  # untied only; keys[2] stays reserved so the
+        # tied/untied trees share every other leaf's init stream
+        flat["lm_head"] = L.init_from_spec(keys[2], spec["lm_head"], dtype)
     if "pos_embed" in spec:
         flat["pos_embed"] = L.init_from_spec(
             jax.random.fold_in(key, 99), spec["pos_embed"], dtype)
@@ -164,13 +175,32 @@ def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
     return x, new_cache, aux
 
 
+def head_weight(params, cfg: ModelConfig):
+    """(w, transposed): the logit-producing matrix and its storage layout.
+
+    Untied: ``params["lm_head"]["w"]`` in (D, V) use layout ((C, D, V)
+    audio), ``transposed=False``. Tied: ``params["tok_embed"]["w"]`` in
+    (V, D) storage ((C, V, D) audio), ``transposed=True`` — consumers fold
+    the transpose into their contraction (reference paths) or dispatch the
+    transposed-w kernels; the gradient then lands directly on the embedding
+    in its storage layout.
+    """
+    if cfg.tie_embeddings:
+        return params["tok_embed"]["w"], True
+    return params["lm_head"]["w"], False
+
+
 def logits_from_hidden(params, cfg: ModelConfig, hidden,
                        rules: Optional[Rules] = None):
     """Full-vocab logits (serving). hidden (B,S,D) -> (B,S,V[,per codebook])."""
     rules = rules or Rules(cfg.rule_overrides)
-    w = params["lm_head"]["w"]
+    w, tied = head_weight(params, cfg)
     if cfg.family == "audio":
-        out = jnp.einsum("bsd,cdv->bcsv", hidden, w)
+        out = jnp.einsum("bsd,cvd->bcsv" if tied else "bsd,cdv->bcsv",
+                         hidden, w)
+    elif tied:
+        # XLA folds the transpose into the dot (no materialized w.T)
+        out = jnp.einsum("bsd,vd->bsv", hidden, w)
     else:
         out = hidden @ w
     out = _mask_pad_vocab(out, cfg)
@@ -241,9 +271,16 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
 
     labels: (B,S) int32, -1 = masked; audio: (B, n_codebooks, S).
     Returns (mean_loss, total_weight).
+
+    Tied heads (``cfg.tie_embeddings``): ``w`` is the (V, D) embedding; the
+    fused route dispatches the transposed-w kernel variants (dW lands in
+    (V, D), directly on the embedding) and the scan fallback contracts
+    ``tok_embed.w.T`` chunk by chunk. The head's sharding is derived from
+    the storage layout's ("vocab", "embed") logical axes — the same
+    physical axes as the untied head's ("embed", "vocab"), swapped.
     """
     rules = rules or Rules(cfg.rule_overrides)
-    w = params["lm_head"]["w"]
+    w, tied = head_weight(params, cfg)
     B, S = hidden.shape[0], hidden.shape[1]
 
     from repro.kernels import dispatch as _kd  # lazy: optional kernel layer
@@ -252,17 +289,20 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
     if mesh is not None:
         h_sh = rules.sharding(("act_batch", "act_seq", "act_embed"), mesh,
                               hidden.shape)
-        w_sh = rules.sharding(("embed", "vocab"), mesh, head_shape)
+        w_sh = rules.sharding(("vocab", "embed") if tied
+                              else ("embed", "vocab"), mesh, head_shape)
     # resolve REPRO_FUSED once and thread it through: the branch taken
     # here and the route inside xent_loss must come from the same read
     mode = _kd.resolve_mode()
     route, _ = _kd.xent_route(hidden.shape, head_shape, mode,
-                              h_sharding=h_sh, w_sharding=w_sh)
+                              h_sharding=h_sh, w_sharding=w_sh,
+                              transposed=tied)
     if route == "kernel":
         def head_loss_sums(wh, labs):
             losses = _kd.xent_loss(hidden, wh, labs,
                                    vocab_size=cfg.vocab_size, mode=mode,
-                                   h_sharding=h_sh, w_sharding=w_sh)
+                                   h_sharding=h_sh, w_sharding=w_sh,
+                                   transposed=tied)
             return jnp.sum(losses), jnp.sum((labs >= 0).astype(jnp.float32))
 
         if cfg.family == "audio":
@@ -278,6 +318,11 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
     nch = S // chunk
 
     def per_head(wh, labs):
+        if tied:
+            # chunked scan over tok_embed.w.T: the transpose is lazy and
+            # fuses into each chunk's dot; grads land on the (V, D) storage
+            wh = jnp.swapaxes(wh, -1, -2)
+
         def body(carry, i):
             s0 = i * chunk
             h_c = jax.lax.dynamic_slice_in_dim(hidden, s0, chunk, 1)

@@ -7,6 +7,14 @@ and a dim is only sharded if its size is divisible by the product of the
 mapped mesh axis sizes (otherwise it is left replicated) — this is what makes
 the same model lower on (data, model), (pod, data, model) and single-device
 CPU meshes without per-mesh configs.
+
+Tied LM heads: a ``tie_embeddings`` model stores the head as the embedding,
+logical axes ("vocab", "embed"), where the untied head is ("embed", "vocab").
+Under the default rules both map to the same physical pair — vocab -> TP
+("model"), embed -> FSDP ("data") — just with the dims swapped, so the fused
+xent/optimizer shard plans swap their psum/gather axes accordingly (the
+vocab-axis psum of the loss reduces dim 0 of the tied matrix, and its FSDP
+embed gather is dim 1; see ``repro.kernels.dispatch``).
 """
 from __future__ import annotations
 

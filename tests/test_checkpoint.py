@@ -106,39 +106,72 @@ def test_async_save_overlaps_and_commits(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_multi_host_manifest_merges_checksums(tmp_path):
-    """A later host's save must not clobber an earlier host's shard entry.
-
-    Models two hosts sharing one step tmp dir: host 0's shard + manifest
-    are already in the tmp dir when host 1 saves. Host 1's manifest must
-    merge host 0's checksum (the manifest is authoritative for restore),
-    and its stale-shard cleanup must only touch its own files.
-    """
-    import shutil
+def test_multi_host_barrier_last_host_commits(tmp_path):
+    """Barrier: an early host leaves the step uncommitted; the last host to
+    arrive observes completeness and commits for everyone, with each host's
+    own ``manifest.<host>.json`` intact (no cross-host manifest writes)."""
     tree = make_tree()
-    # materialize host 0's shard + manifest via a save to a scratch dir
-    scratch = tmp_path / "scratch"
-    host0_dir = ckpt.save(str(scratch), 7, tree, host_id=0, n_hosts=2)
-    tmp_dir = tmp_path / "ckpt" / "step_0000000007.tmp"
-    os.makedirs(tmp_dir)
-    for name in os.listdir(host0_dir):
-        if name != "COMMITTED":
-            shutil.copy(os.path.join(host0_dir, name), tmp_dir / name)
-    # host 1 saves the same step; its commit must carry both shards
-    ckpt.save(str(tmp_path / "ckpt"), 7, tree, host_id=1, n_hosts=2)
-    for host in (0, 1):
-        got = ckpt.restore(str(tmp_path / "ckpt"), 7, tree, host_id=host)
+    ckpt.save(str(tmp_path), 7, tree, host_id=0, n_hosts=2)
+    # host 0 alone must NOT commit (the old best-effort merge did, racing
+    # host 1's manifest write)
+    assert ckpt.latest_step(str(tmp_path)) is None
+    assert os.path.exists(tmp_path / "step_0000000007.tmp"
+                          / "manifest.00000.json")
+    ckpt.save(str(tmp_path), 7, tree, host_id=1, n_hosts=2)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    step_dir = tmp_path / "step_0000000007"
+    for h in (0, 1):
+        assert os.path.exists(step_dir / f"manifest.{h:05d}.json")
+        got = ckpt.restore(str(tmp_path), 7, tree, host_id=h)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the merged manifest (legacy readers) carries both hosts' checksums
+    import json
+    with open(step_dir / "manifest.json") as f:
+        merged = json.load(f)
+    assert {n[:11] for n in merged["checksums"]} == {"shard_00000",
+                                                     "shard_00001"}
+
+
+def test_multi_host_concurrent_saves_commit_exactly_once(tmp_path):
+    """Both hosts save concurrently with a barrier timeout: every shard and
+    every per-host manifest survives, regardless of which host commits."""
+    import threading
+    tree = make_tree()
+    errs = []
+
+    def worker(h):
+        try:
+            ckpt.save(str(tmp_path), 3, tree, host_id=h, n_hosts=2,
+                      barrier_timeout=30.0)
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(h,)) for h in (0, 1)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(60)
+    assert not errs, errs
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    for h in (0, 1):
+        got = ckpt.restore(str(tmp_path), 3, tree, host_id=h)
         for a, b in zip(jax.tree_util.tree_leaves(got),
                         jax.tree_util.tree_leaves(tree)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_sequential_multi_host_save_keeps_committed_shards(tmp_path):
-    """A host committing after another host must adopt, not destroy, the
-    already-committed step's shards (re-commit copies them into its tmp)."""
+def test_resave_of_committed_step_keeps_other_hosts_shards(tmp_path):
+    """A host re-saving an already committed step must adopt, not destroy,
+    the other hosts' committed shards + manifests (the rename replaces the
+    whole step dir)."""
     tree = make_tree()
     ckpt.save(str(tmp_path), 5, tree, host_id=0, n_hosts=2)
-    ckpt.save(str(tmp_path), 5, tree, host_id=1, n_hosts=2)
+    ckpt.save(str(tmp_path), 5, tree, host_id=1, n_hosts=2)  # commits
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    # host 0 re-saves the committed step (e.g. resumed after a crash)
+    ckpt.save(str(tmp_path), 5, tree, host_id=0, n_hosts=2)
     step_dir = tmp_path / "step_0000000005"
     shards = sorted(n for n in os.listdir(step_dir) if n.startswith("shard_"))
     assert [s[:11] for s in shards] == ["shard_00000", "shard_00001"]
@@ -152,13 +185,15 @@ def test_sequential_multi_host_save_keeps_committed_shards(tmp_path):
 def test_committed_shard_wins_over_stale_tmp_debris(tmp_path):
     """A crashed re-save's tmp shard must not shadow the committed one.
 
-    Host 1 commits step N, then a re-save crashes after writing a garbage
-    shard into the new tmp dir but before writing a tmp manifest. Host 0's
-    later save adopts host 1's committed shard (overwriting the unvouched
-    tmp debris), so host 1's restore still checksums clean.
+    Host 1 commits step N (both hosts saved), then a re-save crashes after
+    writing a garbage shard into the new tmp dir but before writing host
+    1's tmp manifest. Host 0's later save adopts host 1's committed shard
+    (overwriting the unvouched tmp debris), so host 1's restore still
+    checksums clean.
     """
     tree = make_tree()
-    ckpt.save(str(tmp_path), 9, tree, host_id=1, n_hosts=2)
+    ckpt.save(str(tmp_path), 9, tree, host_id=0, n_hosts=2)
+    ckpt.save(str(tmp_path), 9, tree, host_id=1, n_hosts=2)  # commits
     (shard_name,) = (n for n in os.listdir(tmp_path / "step_0000000009")
                      if n.startswith("shard_00001"))
     tmp_dir = tmp_path / "step_0000000009.tmp"
@@ -171,3 +206,41 @@ def test_committed_shard_wins_over_stale_tmp_debris(tmp_path):
         for a, b in zip(jax.tree_util.tree_leaves(got),
                         jax.tree_util.tree_leaves(tree)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_merged_manifest_still_restores(tmp_path):
+    """Checkpoints written by the old single-merged-manifest format (no
+    per-host manifests) must keep restoring."""
+    tree = make_tree()
+    path = ckpt.save(str(tmp_path), 2, tree)
+    for n in list(os.listdir(path)):
+        if n.startswith("manifest.") and n != "manifest.json":
+            os.remove(os.path.join(path, n))
+    got = ckpt.restore(str(tmp_path), 2, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _model_trees():
+    """(untied, tied) param trees of the same tiny model."""
+    untied = {"tok_embed": {"w": jnp.ones((8, 4))},
+              "final_norm": {"s": jnp.ones((4,))},
+              "lm_head": {"w": jnp.ones((4, 8))}}
+    tied = {"tok_embed": {"w": jnp.ones((8, 4))},
+            "final_norm": {"s": jnp.ones((4,))}}
+    return untied, tied
+
+
+def test_restore_tied_model_from_untied_checkpoint_names_lm_head(tmp_path):
+    untied, tied = _model_trees()
+    ckpt.save(str(tmp_path), 1, untied)
+    with pytest.raises(ValueError, match="lm_head.*untied"):
+        ckpt.restore(str(tmp_path), 1, tied)
+
+
+def test_restore_untied_model_from_tied_checkpoint_names_lm_head(tmp_path):
+    untied, tied = _model_trees()
+    ckpt.save(str(tmp_path), 1, tied)
+    with pytest.raises(ValueError, match="lm_head.*tie_embeddings"):
+        ckpt.restore(str(tmp_path), 1, untied)
