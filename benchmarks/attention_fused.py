@@ -1,0 +1,237 @@
+"""Fused vs scan-jnp flash attention: HBM-byte accounting, peak
+score-activation bytes, kernel parity, and backend-appropriate timing.
+
+Accounting model (one full attention forward+backward over a causal
+(B, S, S) problem; be = element size of q/k/v, f32 intermediates 4 bytes;
+tile pairs above the causal diagonal are skipped by both paths). The jnp
+scan (``models.layers.flash_attention``) first **repeats GQA kv to the
+full H heads** (one (B, S, H, hd) write each for k and v), then per tile
+pair reads the q/k/v blocks and round-trips its f32 carries through HBM
+block slices: the (B, b, H, hd) output accumulator plus (B, b, H) max/sum
+rows on the forward, and the three f32 dQ/dK/dV accumulators on the
+backward. The fused path (:mod:`repro.kernels.attention`) pays one
+layout transpose per operand, reads kv **un-repeated** (1/G of the scan's
+kv bytes) once per live q tile, and keeps every carry in VMEM scratch —
+its only f32 HBM traffic is the final lse row.
+
+The memory figure of merit is the peak score activation: the scan's
+einsum materializes the (B, H, b, b) f32 score tile across *all* batch
+and head entries at once, while the kernels hold one (bq, bk) f32 VMEM
+tile regardless of B, H, S (see ``attn/peak_score_bytes_*``).
+
+Timing follows the convention of :mod:`benchmarks.xent_fused`: off-TPU
+the compiled-kernel path would time the Pallas *interpreter*, so the
+wall-clock section times the jnp scan under compiled XLA (fused-off), and
+the fused kernels are timed only on TPU (``--tiny`` also times the
+interpret oracle at toy shapes so the harness itself cannot rot). Parity
+runs the real kernels on every backend.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# paper-scale attention shapes (bf16): a 60M-ish MHA model and a 1B-ish
+# GQA model — the GQA ratio is the point (the scan pays G-times the kv
+# traffic; cf. the head-dominance framing the SCALE/APOLLO papers share)
+SHAPES = {
+    "60M": dict(B=4, S=4096, H=8, K=8, hd=64),
+    "1B-gqa": dict(B=4, S=4096, H=32, K=8, hd=128),
+}
+
+
+def _tiles(S, hd, be):
+    from repro.kernels.attention.attention import _pick_tiles
+    return _pick_tiles(S, S, hd, hd, None, el_bytes=be)
+
+
+def scan_bytes(B, S, H, K, hd, block=1024, be=2):
+    """(total_bytes, peak_score_bytes) for the jnp scan path (causal).
+
+    The dominant term is the (B, H, b, b) f32 score tile the einsum
+    materializes across all batch/head entries at once — far past
+    register capacity, so it lives in HBM between the two matmuls.
+    Counted best-case for XLA (one write+read on the forward with the
+    whole mask/exp chain fused; two such round-trips on the backward for
+    the recomputed p and ds), mirroring the xent benchmark's generosity.
+    """
+    from repro.models.layers import _pick_block
+    b = _pick_block(S, S, block)
+    nq = S // b
+    npairs = nq * (nq + 1) // 2
+    blk = B * b * H * hd * be          # one q/k/v/do block
+    f32_blk = B * b * H * hd * 4       # one f32 accumulator block slice
+    score = B * H * b * b * 4          # one materialized f32 score tile
+    rep = 2 * B * S * H * hd * be if K != H else 0  # materialized kv repeat
+    fwd = npairs * (3 * blk + 2 * f32_blk + 2 * score)  # qkv + acc + p
+    bwd = npairs * (4 * blk + 3 * 2 * f32_blk + 4 * score)  # + p, ds
+    out = 2 * B * S * H * hd * be                   # out write + bwd read
+    return rep + fwd + bwd + out, score
+
+
+def fused_bytes(B, S, H, K, hd, be=2):
+    """(total_bytes, peak_score_bytes) for the fused kernel path (causal).
+
+    kv blocks are revisited per live q tile but never repeated (K heads,
+    not H); q/out/do blocks stream once per kernel; the layout transposes
+    (one read+write per operand per kernel) are counted honestly.
+    """
+    bq, bk = _tiles(S, hd, be)
+    nq, nk = math.ceil(S / bq), math.ceil(S / bk)
+    live = sum(min(nk, math.ceil((i + 1) * bq / bk)) for i in range(nq))
+    q_sz = B * S * H * hd * be
+    kv_sz = B * S * K * hd * be                     # un-repeated!
+    kblk = B * H * bk * hd * be                     # kv block per q head
+    # layout transposes, one read+write per operand per kernel: forward
+    # moves q/k/v in and out back (2q + 2kv), dQ adds dout in and dq out
+    # (3q + 2kv), dK/dV adds dk/dv out (2q + 4kv)
+    transpose = 2 * (7 * q_sz + 8 * kv_sz)
+    fwd = q_sz + live * kblk + q_sz                 # q in, kv stream, out
+    dq = 2 * q_sz + live * kblk + q_sz              # q+do in, kv, dq out
+    dkv = nk * 2 * q_sz + 2 * kv_sz + 2 * kv_sz     # q/do per kv tile
+    lse = B * H * S * 4 * 3
+    return transpose + fwd + dq + dkv + lse, bq * bk * 4
+
+
+def _accounting_rows(shapes):
+    rows = []
+    peaks = {}
+    for name, s in shapes.items():
+        sb, speak = scan_bytes(**s)
+        fb, fpeak = fused_bytes(**s)
+        peaks[name] = fpeak
+        rows += [
+            (f"attn/{name}/jnp_scan_hbm_bytes", None,
+             f"{sb / 1e9:.2f} GB (peak score block {speak / 1e6:.0f} MB, "
+             f"f32 carries round-trip HBM, kv repeated "
+             f"x{s['H'] // s['K']})"),
+            (f"attn/{name}/fused_hbm_bytes", None,
+             f"{fb / 1e9:.2f} GB (peak score tile {fpeak / 1e6:.2f} MB in "
+             f"VMEM, carries never leave VMEM, kv un-repeated)"),
+            (f"attn/{name}/hbm_ratio", None,
+             f"{sb / fb:.2f}x fewer bytes fused"),
+        ]
+        assert fb < sb, (name, fb, sb)  # the PR's acceptance bar
+    if len(peaks) > 1:
+        vals = sorted(set(peaks.values()))
+        rows.append(("attn/peak_score_bytes_fused", None,
+                     f"{' vs '.join(f'{v / 1e6:.2f} MB' for v in vals)} "
+                     f"across {', '.join(peaks)} — one (bq, bk) VMEM tile, "
+                     f"independent of B, H and S (the scan's einsum "
+                     f"materializes the tile across all B*H at once)"))
+    return rows
+
+
+def _parity_rows(tiny: bool):
+    """Real kernels (interpret oracle off-TPU) vs the jnp scan reference:
+    causal GQA fwd + dQ/dK/dV, and the kv_len decode bound."""
+    from repro.kernels import dispatch
+    from repro.models.layers import chunked_q_attention, flash_attention
+
+    B, S, H, K, hd = (1, 32, 4, 2, 8) if tiny else (2, 128, 8, 2, 32)
+    scale = hd ** -0.5
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    do = jax.random.normal(ks[3], (B, S, H, hd))
+    # explicit mode: a user-exported REPRO_FUSED=off must not silently
+    # turn this into a reference-vs-reference comparison
+    mode = "compiled" if jax.devices()[0].platform == "tpu" else "interpret"
+    assert dispatch.attn_route(q.shape, k.shape, True, mode)[0] == "kernel"
+
+    def f_fused(q, k, v):
+        return jnp.sum(dispatch.flash_attention(
+            q, k, v, scale=scale, causal=True, mode=mode) * do)
+
+    def f_ref(q, k, v):
+        kf, vf = jnp.repeat(k, H // K, 2), jnp.repeat(v, H // K, 2)
+        return jnp.sum(flash_attention(q, kf, vf, 128, scale, True) * do)
+
+    v1, g1 = jax.value_and_grad(f_fused, argnums=(0, 1, 2))(q, k, v)
+    v2, g2 = jax.value_and_grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    errs = {"out": abs(float(v1) - float(v2)) / max(abs(float(v2)), 1e-9)}
+    for name, a, b in zip(("dQ", "dK", "dV"), g1, g2):
+        errs[name] = float(jnp.max(jnp.abs(a - b)))
+    assert errs["out"] < 1e-5 and max(errs[n] for n in ("dQ", "dK", "dV")) \
+        < 1e-4, errs
+
+    # decode: S=1 against the cache with a kv_len bound
+    qd = jax.random.normal(ks[0], (B, 1, H, hd))
+    fill = jnp.asarray(S // 3)
+    od = dispatch.flash_attention(qd, k, v, scale=scale, causal=False,
+                                  kv_len=fill, mode=mode)
+    rd = chunked_q_attention(qd, k, v, 1, scale, kv_len=fill)
+    errs["decode"] = float(jnp.max(jnp.abs(od - rd)))
+    assert errs["decode"] < 1e-5, errs
+    return [(f"attn/parity_{n}_err", None, f"{e:.2e}")
+            for n, e in errs.items()]
+
+
+def _timing_rows(tiny: bool):
+    """Wall time of attention loss+grad; see the module docstring for what
+    is compared on which backend."""
+    from repro.kernels import dispatch
+    from repro.models.layers import flash_attention
+
+    from .common import repro_fused, time_call
+
+    on_tpu = jax.devices()[0].platform == "tpu"
+    B, S, H, K, hd = (1, 32, 4, 2, 8) if tiny else (2, 512, 8, 2, 64)
+    scale = hd ** -0.5
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+
+    def scan_loss(q, k, v):
+        kf, vf = jnp.repeat(k, H // K, 2), jnp.repeat(v, H // K, 2)
+        return jnp.sum(flash_attention(q, kf, vf, 128, scale, True) ** 2)
+
+    def fused_loss(q, k, v):
+        return jnp.sum(dispatch.flash_attention(
+            q, k, v, scale=scale, causal=True) ** 2)
+
+    rows = [("attn/timing_backend", None, jax.devices()[0].platform)]
+    with repro_fused("off"):  # scan path, compiled XLA
+        g_scan = jax.jit(jax.grad(scan_loss, argnums=(0, 1, 2)))
+        us_scan = time_call(g_scan, q, k, v)
+    rows.append(("attn/step_jnp_scan", round(us_scan, 1),
+                 f"grad of blockwise scan, B={B} S={S} H={H} K={K} "
+                 f"hd={hd}"))
+    if on_tpu or tiny:
+        g_fused = jax.jit(jax.grad(fused_loss, argnums=(0, 1, 2)))
+        us_fused = time_call(g_fused, q, k, v)
+        label = "compiled kernels" if on_tpu else \
+            "interpret oracle (correctness harness, not a perf number)"
+        rows.append(("attn/step_fused", round(us_fused, 1), label))
+    else:
+        rows.append(("attn/step_fused", None,
+                     "skipped off-TPU (interpret oracle would time the "
+                     "Pallas interpreter; run --tiny for the harness "
+                     "smoke, or on TPU for real numbers)"))
+    return rows
+
+
+def run(quick: bool = False):
+    """``quick`` (the CLI's ``--tiny``) swaps the paper-scale shape sweep
+    for toy shapes and times the interpret oracle — the CI smoke mode."""
+    tiny = quick
+    shapes = ({"tiny": dict(B=1, S=64, H=4, K=2, hd=8)} if tiny else SHAPES)
+    rows = [("attn/mode", None,
+             f"backend={jax.devices()[0].platform} tiny={tiny} be=2 "
+             f"(bf16 q/k/v)")]
+    rows += _accounting_rows(shapes)
+    rows += _parity_rows(tiny)
+    rows += _timing_rows(tiny)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    from .common import emit, json_arg
+    emit(run(quick="--tiny" in sys.argv), json_path=json_arg(sys.argv))

@@ -1,8 +1,10 @@
-# OPTIONAL layer: custom kernels for the paper's compute hot-spot (the
-# SCALE update). `dispatch` is the single entry point — it owns backend
-# selection (compiled on TPU, interpret oracle elsewhere), the coverage
-# matrix, and jnp-reference fallbacks. The kernel packages each pair a
-# Pallas implementation (<name>.py) with a pure-jnp oracle (ref.py).
+# OPTIONAL layer: custom kernels for the training step's three hot paths
+# — the SCALE update (colnorm/scale_head), the LM-head cross-entropy
+# (xent), and flash attention (attention). `dispatch` is the single entry
+# point — it owns backend selection (compiled on TPU, interpret oracle
+# elsewhere), the coverage matrix, shard_map plans, and jnp-reference
+# fallbacks. The kernel packages each pair a Pallas implementation
+# (<name>.py) with a pure-jnp oracle (ref.py).
 from . import dispatch
 
 __all__ = ["dispatch"]

@@ -1,0 +1,7 @@
+# Fused blockwise (flash) attention kernels. As with the optimizer-update
+# and xent packages, `attention.py` holds the Pallas kernels and `ref.py`
+# the pure-jnp oracle; `repro.kernels.dispatch` owns routing (backend/mode
+# selection, the coverage matrix, shard_map plans) — import that, not this.
+# The *production* jnp fallback is the `lax.scan` custom_vjp in
+# `repro.models.layers.flash_attention` (bitwise pre-PR-5 path); ref.py is
+# the test-scale full-softmax oracle.

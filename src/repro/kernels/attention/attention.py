@@ -1,0 +1,396 @@
+"""Pallas TPU kernels for fused blockwise (flash) attention.
+
+Attention is the last major hot path of a training step that still runs as
+a jnp ``lax.scan`` over tile pairs (``models.layers.flash_attention``):
+correct and memory-O(tile), but each scan step round-trips the f32
+output/max/sum carries through HBM block slices and — for GQA — consumes a
+kv tree *repeated* to the full query head count. These kernels keep the
+flash algorithm and move everything tile-resident:
+
+  * ``mha_fwd`` — grid (batch*heads, q tiles, kv tiles), kv innermost.
+    Each step computes one (bq, bk) score tile on the MXU and folds it
+    into the running online-softmax carries (max, sum, f32 output
+    accumulator) held in VMEM scratch; the normalized output and per-row
+    ``lse`` are emitted once at the last kv tile. The f32 carries never
+    touch HBM, and peak score storage is one (bq, bk) VMEM tile —
+    independent of S, T and the head count (the scan's einsum materializes
+    the (B, H, bq, bk) tile across *all* heads at once).
+  * ``mha_bwd_dq`` — same tiling; recomputes the score tile from
+    (q, k, lse), forms ``ds = p * (dp - D) * scale`` in registers and
+    accumulates ``ds @ k_tile`` into a (bq, hd) scratch, one dQ write per
+    q tile.
+  * ``mha_bwd_dkv`` — transposed grid (batch*kv_heads, kv tiles, group,
+    q tiles): the (bk, hd)/(bk, hdv) dK/dV tiles stay resident in scratch
+    while all q tiles *of every query head in the group* stream by — the
+    GQA group reduction happens in VMEM, so dK/dV are emitted directly in
+    the (B, T, K, hd) storage layout (the scan repeats kv up front and
+    pays G-times the kv traffic in both directions).
+
+GQA is native: kv BlockSpecs index the kv head as ``q_head // group``
+(forward/dQ) or iterate the group on the grid (dK/dV) — the H/K repeat is
+never materialized. Causal masking is *rectangular* with a static offset
+``T - S`` (query ``i`` sees keys ``j <= offset + i``; ``T == S`` is
+ordinary causal, ``T > S`` a cached-prefill continuation), folded into the
+tile iota; tile pairs that are fully masked — above the causal diagonal or
+past the traced ``kv_len`` cache-fill bound — skip their compute entirely
+via ``pl.when`` (the ~S^2/2 causal FLOP saving, and decode over a mostly
+empty cache touches only the filled tiles).
+
+Masking mirrors the xent kernels' conventions (out-of-bounds block regions
+are undefined — NaN in interpret mode — and 0*NaN = NaN, so *both*
+operands of every contraction are zeroed on padded positions):
+
+  * remainder kv tiles (T % bk): score columns past T are masked to the
+    finite ``_NEG`` stand-in and k/v rows past T are zeroed before any
+    contraction that consumes them;
+  * remainder q tiles (S % bq): forward/dQ rows are independent and
+    clipped on write; dK/dV zero q/dout rows and ``p``/``ds`` rows past S
+    before the row contraction;
+  * fully-masked rows (``kv_len`` 0, or nothing valid) emit 0 output via
+    the ``max(l, 1e-30)`` clamp — the same convention as the jnp scan —
+    and a ~-1e30 ``lse``, which makes their backward contributions vanish.
+
+Layout: the public entry points take the model's (B, S, H, hd) activation
+layout and transpose to the kernels' (B, H, S, hd) so the sequence tile is
+the sublane dimension (one XLA transpose each way; the grid then indexes
+4-D blocks of shape (1, 1, tile, hd)). ``kv_len`` is a traced SMEM scalar.
+All softmax statistics and accumulators are f32; probability tiles are
+cast to the value dtype for the MXU contraction exactly like the scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30  # finite -inf stand-in: keeps the running max NaN-free when a
+#               tile (or a whole row) is entirely masked
+
+
+def _pick_tiles(S: int, T: int, hd: int, hdv: int, block=None, *,
+                el_bytes: int = 4):
+    """(bq, bk) tile for one kernel, clamped to the (padded) problem.
+
+    Both tiles grow until the per-step VMEM working set — q/k/v blocks,
+    the f32 (bq, bk) score tile, and the f32 output/dQ accumulator —
+    reaches ~8 MiB, shrinking bk first (k/v stream per q tile; a bigger bq
+    is the HBM-reuse lever). Caps at 512, floors at the (8, 128) hardware
+    tiling; the clamp keeps tiny problems to a single tile.
+    """
+    if block is not None:
+        bq, bk = block
+    else:
+        bq = bk = 512
+
+        def cost(bq, bk):
+            return ((bq + bk) * hd + bk * hdv) * el_bytes \
+                + (bq * bk + bq * hdv + bq * hd) * 4
+
+        while cost(bq, bk) > (8 << 20) and bk > 128:
+            bk //= 2
+        while cost(bq, bk) > (8 << 20) and bq > 128:
+            bq //= 2
+    bq = min(bq, -(-S // 8) * 8)
+    bk = min(bk, -(-T // 128) * 128)
+    return bq, bk
+
+
+def _run_pair(i, j, bq, bk, causal: bool, offset: int, kl):
+    """Traced predicate: does tile pair (i, j) contain any valid position?
+
+    False above the rectangular-causal diagonal (the last query row of
+    tile i, at global position ``offset + (i+1)*bq - 1``, sits before the
+    first key of tile j) or entirely past the ``kv_len`` fill bound —
+    skipped pairs run no MXU work at all.
+    """
+    run = j * bk < kl
+    if causal:
+        run &= offset + (i + 1) * bq - 1 >= j * bk
+    return run
+
+
+def _masks(i, j, bq, bk, causal: bool, offset: int, kl, s_len: int,
+           t_len: int):
+    """(col validity, row validity) (bq, bk) masks for one score tile."""
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = (cols < t_len) & (cols < kl)
+    if causal:
+        valid &= offset + rows >= cols
+    return valid, rows < s_len
+
+
+def _zero_invalid_rows(ref, j, bk, t_len: int):
+    """k/v block with undefined rows past T zeroed (remainder kv tiles)."""
+    rows = j * bk + jax.lax.broadcasted_iota(jnp.int32, ref.shape[2:], 0)
+    return jnp.where(rows < t_len, ref[0, 0], 0)
+
+
+def _sdot(a, b):
+    """(bq, d) x (bk, d) -> (bq, bk) f32 score-style contraction."""
+    return jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _tdot(a, b):
+    """(bq, bk) x (bq, d) -> (bk, d) f32 row (token) contraction."""
+    return jax.lax.dot_general(a, b, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward: online softmax over kv tiles, carries in VMEM scratch
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, kl_ref, o_ref, lse_ref,
+                m_acc, l_acc, acc, *, scale, causal, offset, bq, bk,
+                n_k_tiles, s_len, t_len):
+    i, j = pl.program_id(1), pl.program_id(2)
+    kl = kl_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, _NEG)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    def _compute():
+        s = _sdot(q_ref[0, 0], k_ref[0, 0]) * scale
+        valid, _ = _masks(i, j, bq, bk, causal, offset, kl, s_len, t_len)
+        s = jnp.where(valid, s, _NEG)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_acc[...] - m_new)
+        # explicit mask on the exp: with everything pinned at _NEG the
+        # difference is 0 and exp would contribute 1 per masked column
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_acc[...] = l_acc[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_acc[...] = m_new
+        v_eff = _zero_invalid_rows(v_ref, j, bk, t_len)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p.astype(v_eff.dtype), v_eff, preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k_tiles - 1)
+    def _emit():
+        l = jnp.maximum(l_acc[...], 1e-30)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_acc[...] + jnp.log(l)
+
+
+def mha_fwd(q, k, v, kv_len=None, *, scale: float, causal: bool = True,
+            block=None, interpret: bool = True):
+    """(out, lse): q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv).
+
+    H % K == 0 (kv blocks are indexed by ``q_head // group`` — the repeat
+    is never materialized). ``kv_len`` (traced int, default T) bounds the
+    valid key positions; at this layer it simply intersects whatever
+    causal mask is active (the dispatch entry rejects causal + kv_len —
+    the anchored-at-T causal offset is not the causal-over-fill a caller
+    might expect). Returns out (B, S, H, hdv) in q's dtype and lse
+    (B, H, S) f32 — the combined max+log-sum the backward kernels (and a
+    future cross-shard softmax combine) consume.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // K
+    offset = T - S if causal else 0
+    bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
+    grid = (B * H, pl.cdiv(S, bq), pl.cdiv(T, bk))
+    kl = jnp.asarray(T if kv_len is None else kv_len,
+                     jnp.int32).reshape(1, 1)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                          offset=offset, bq=bq, bk=bk, n_k_tiles=grid[2],
+                          s_len=S, t_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hdv), lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1), lambda bh, i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hdv), lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda bh, i, j: (bh // H, bh % H, i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, H, S, hdv), q.dtype),
+                   jax.ShapeDtypeStruct((B, H, S, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hdv), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, kl)
+    return jnp.swapaxes(out, 1, 2), lse[..., 0]
+
+
+# --------------------------------------------------------------------------
+# backward dQ: recompute score tiles, dQ accumulator resident per q tile
+# --------------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref, dq_ref,
+               acc, *, scale, causal, offset, bq, bk, n_k_tiles, s_len,
+               t_len):
+    i, j = pl.program_id(1), pl.program_id(2)
+    kl = kl_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    def _compute():
+        s = _sdot(q_ref[0, 0], k_ref[0, 0]) * scale
+        valid, _ = _masks(i, j, bq, bk, causal, offset, kl, s_len, t_len)
+        p = jnp.where(valid, jnp.exp(s - lse_ref[0, 0]), 0.0)
+        v_eff = _zero_invalid_rows(v_ref, j, bk, t_len)
+        dp = _sdot(do_ref[0, 0], v_eff)
+        ds = p * (dp - d_ref[0, 0]) * scale
+        k_eff = _zero_invalid_rows(k_ref, j, bk, t_len)
+        acc[...] += jnp.dot(ds.astype(k_eff.dtype), k_eff,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k_tiles - 1)
+    def _emit():
+        dq_ref[0, 0] = acc[...].astype(dq_ref.dtype)
+
+
+def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
+               causal: bool = True, block=None, interpret: bool = True):
+    """dQ (B, S, H, hd) in q's dtype.
+
+    ``lse`` (B, H, S) is the forward's log-sum-exp; ``delta`` (B, H, S)
+    f32 is ``sum(dout * out, -1)`` — both row vectors stream as (bq, 1)
+    blocks. Rows past S carry undefined statistics; their NaNs stay on
+    independent rows and are clipped on write.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // K
+    offset = T - S if causal else 0
+    bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
+    grid = (B * H, pl.cdiv(S, bq), pl.cdiv(T, bk))
+    kl = jnp.asarray(T if kv_len is None else kv_len,
+                     jnp.int32).reshape(1, 1)
+    row = pl.BlockSpec((1, 1, bq, 1), lambda bh, i, j: (bh // H, bh % H, i, 0))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          offset=offset, bq=bq, bk=bk, n_k_tiles=grid[2],
+                          s_len=S, t_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hdv), lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
+            pl.BlockSpec((1, 1, bq, hdv), lambda bh, i, j: (bh // H, bh % H, i, 0)),
+            row, row,
+            pl.BlockSpec((1, 1), lambda bh, i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bh, i, j: (bh // H, bh % H, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl)
+    return jnp.swapaxes(dq, 1, 2)
+
+
+# --------------------------------------------------------------------------
+# backward dK/dV: kv tile resident while (group x q) tiles stream
+# --------------------------------------------------------------------------
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, offset,
+                bq, bk, n_g, n_q_tiles, s_len, t_len):
+    j, g, i = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    kl = kl_ref[0, 0]
+
+    @pl.when((g == 0) & (i == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    def _compute():
+        # the q (token) axis is contracted here, so — unlike forward/dQ —
+        # undefined remainder *rows* must be zeroed on both operand sides
+        qrows = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                  q_ref.shape[2:], 0)
+        q_eff = jnp.where(qrows < s_len, q_ref[0, 0], 0)
+        dorows = i * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                   do_ref.shape[2:], 0)
+        do_eff = jnp.where(dorows < s_len, do_ref[0, 0], 0)
+        s = _sdot(q_eff, k_ref[0, 0]) * scale
+        valid, rowmask = _masks(i, j, bq, bk, causal, offset, kl, s_len,
+                                t_len)
+        # rows past S carry undefined lse/delta: fold the row bound into
+        # the mask so p/ds are exactly 0 there (0 * NaN would poison the
+        # whole dK/dV accumulator, not just one row)
+        valid &= rowmask
+        p = jnp.where(valid, jnp.exp(s - lse_ref[0, 0]), 0.0)
+        dv_acc[...] += _tdot(p.astype(do_eff.dtype), do_eff)
+        v_eff = _zero_invalid_rows(v_ref, j, bk, t_len)
+        dp = _sdot(do_eff, v_eff)
+        ds = jnp.where(valid, p * (dp - d_ref[0, 0]) * scale, 0.0)
+        dk_acc[...] += _tdot(ds.astype(q_eff.dtype), q_eff)
+
+    @pl.when((g == n_g - 1) & (i == n_q_tiles - 1))
+    def _emit():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def mha_bwd_dkv(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
+                causal: bool = True, block=None, interpret: bool = True):
+    """(dK, dV) in kv dtypes, emitted directly in the (B, T, K, hd|hdv)
+    storage layout: the grid iterates (kv tiles, group, q tiles) with the
+    dK/dV accumulators resident in VMEM, so the GQA reduction over the
+    ``group`` query heads of each kv head never materializes a
+    (B, T, H, hd)-sized gradient.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // K
+    offset = T - S if causal else 0
+    bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
+    grid = (B * K, pl.cdiv(T, bk), G, pl.cdiv(S, bq))
+    kl = jnp.asarray(T if kv_len is None else kv_len,
+                     jnp.int32).reshape(1, 1)
+    qmap = lambda bk_, j, g, i: (bk_ // K, (bk_ % K) * G + g, i, 0)
+    kvmap = lambda bk_, j, g, i: (bk_ // K, bk_ % K, j, 0)
+    row = pl.BlockSpec((1, 1, bq, 1), qmap)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          offset=offset, bq=bq, bk=bk, n_g=G,
+                          n_q_tiles=grid[3], s_len=S, t_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), qmap),
+            pl.BlockSpec((1, 1, bk, hd), kvmap),
+            pl.BlockSpec((1, 1, bk, hdv), kvmap),
+            pl.BlockSpec((1, 1, bq, hdv), qmap),
+            row, row,
+            pl.BlockSpec((1, 1), lambda bk_, j, g, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[pl.BlockSpec((1, 1, bk, hd), kvmap),
+                   pl.BlockSpec((1, 1, bk, hdv), kvmap)],
+        out_shape=[jax.ShapeDtypeStruct((B, K, T, hd), k.dtype),
+                   jax.ShapeDtypeStruct((B, K, T, hdv), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hdv), jnp.float32)],
+        interpret=interpret,
+    )(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl)
+    return jnp.swapaxes(dk, 1, 2), jnp.swapaxes(dv, 1, 2)

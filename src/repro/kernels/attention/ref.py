@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for fused flash attention.
+
+Materializes the full (B, H, S, T) score matrix, so it is a *test-scale*
+oracle: the memory-safe jnp fallback for training is the blockwise
+``lax.scan`` in ``repro.models.layers.flash_attention`` (bitwise reference
+for ``REPRO_FUSED=off``), and the decode-over-cache fallback is
+``repro.models.layers.chunked_q_attention``.
+
+Masking semantics match the kernels exactly:
+
+  * GQA: kv heads are repeated to the query head count inside (the kernels
+    instead index the kv block by ``q_head // group``);
+  * causal is *rectangular*: query ``i`` sees keys ``j <= (T - S) + i``
+    (``T == S`` is ordinary causal; ``T > S`` is a cached-prefill
+    continuation where the query block sits at the end of the key range);
+  * ``kv_len`` bounds the valid key positions (decode over a partially
+    filled cache);
+  * fully-masked rows produce **0** output (the flash convention — the
+    running normalizer is clamped at 1e-30 — where a naive softmax would
+    NaN), via the same finite -inf stand-in the kernels use.
+
+Everything is differentiable: parity tests take ``jax.grad`` of this to
+pin dQ/dK/dV for the backward kernels (the kv repeat sums group-head
+gradients back onto the (B, T, K, hd) layout automatically).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              scale: float, causal: bool = True,
+              kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv); H % K == 0."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    valid = jnp.ones((S, T), bool)
+    if causal:
+        qpos = (T - S) + jnp.arange(S)
+        valid &= qpos[:, None] >= jnp.arange(T)[None, :]
+    if kv_len is not None:
+        valid &= (jnp.arange(T) < kv_len)[None, :]
+    s = jnp.where(valid[None, None], s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[None, None], jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqs,bshd->bqhd", (p / l).astype(v.dtype), v)
+    return out.astype(q.dtype)

@@ -35,6 +35,21 @@ Coverage matrix (``supported`` / ``xent_supported``):
                       embedding, and the shard plan reads the vocab axes
                       off w's dim 0 (dim 1 — FSDP embed — is gathered).
                       Same shape/dtype/masking coverage as the (D, V) row.
+  flash attention     q (B, S, H, hd) x k (B, T, K, hd) x v (B, T, K, hdv)
+                      with H % K == 0 — native GQA: kv blocks are indexed
+                      by ``q_head // group``, the H/K repeat is never
+                      materialized (dK/dV reduce the group in VMEM and
+                      land in the (B, T, K, *) storage layout). Causal is
+                      rectangular (T >= S, query i sees keys <= T-S+i) or
+                      off (cross-attention); a traced ``kv_len`` bounds
+                      the key positions (decode over a partially filled
+                      cache — tiles past the fill, like tiles above the
+                      causal diagonal, skip their compute; kv_len is
+                      non-causal only, the combination raises). Any dtype
+                      (softmax statistics in f32), arbitrary/ragged S and
+                      T (remainder tiles masked via the tile iota).
+                      Uncovered: v whose (B, T, K) disagrees with k, and
+                      causal T < S.
   ==================  =====================================================
 
 Sharded dispatch (pjit meshes)
@@ -112,6 +127,29 @@ over the vocab axes exactly as the norm kernels psum column sums; dH
 psums over the vocab axes, dW over the token axes. w's embed-dim sharding
 is gathered at shard_map entry (the same all-gather GSPMD inserts for the
 unfused head matmul).
+
+Fused flash attention (``flash_attention``)
+-------------------------------------------
+The attention hot path is registered the same way: ``flash_attention`` is
+a ``custom_vjp`` over the blockwise Pallas kernels in
+:mod:`repro.kernels.attention` (score tiles never leave VMEM; the
+backward recomputes them from the saved ``lse`` exactly like the jnp
+scan's custom_vjp). Routing mirrors the other ops — compiled on TPU,
+interpret oracle elsewhere, ``REPRO_FUSED=off`` or an uncovered
+shape/sharding routes to the reference. Callers that own a memory-safe
+jnp path check ``attn_route`` first and keep it (``models.layers`` keeps
+the blockwise ``lax.scan`` as the bitwise reference and
+``chunked_q_attention`` for the decode cache); the in-dispatch fallback
+delegates to those same layer implementations. The shard plan covers the
+**activation batch and head** mesh axes (the dims a
+``_plan_sharding``-style shard_map can express exactly): q and kv must
+shard batch/heads over identical axes — each device then runs its
+(B/n, S, H/m, hd) x (B/n, T, K/m, hd) problem with **no collectives at
+all** (the softmax reduces over the unsharded T, and the GQA group ratio
+is preserved per shard). Sequence- or head_dim-sharded layouts (e.g. the
+``cache_seq -> "model"`` decode cache) and GQA layouts where kv cannot
+shard like q (K not divisible by the head axes) fall back to the jnp
+path, which GSPMD partitions with its small lse all-reduces.
 """
 from __future__ import annotations
 
@@ -125,6 +163,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .attention import attention as _ak
 from .colnorm import colnorm as _ck
 from .colnorm import ref as _cref
 from .colnorm.colnorm import _canon3 as _c3
@@ -687,6 +726,227 @@ def xent_loss(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray, *,
                        transposed)(h, w, labels)
 
 
+# --------------------------------------------------------------------------
+# Fused flash attention
+# --------------------------------------------------------------------------
+
+class AttnPlan(NamedTuple):
+    """Static shard_map recipe for the fused attention.
+
+    ``batch_axes``: mesh axes sharding the leading (batch) dim of q *and*
+    kv. ``head_axes``: mesh axes sharding q's H and kv's K head dims (both
+    must divide, so the GQA group ratio is preserved per shard). There are
+    no cross-shard reductions: every (batch, head) pair is device-local.
+    """
+    mesh: Mesh
+    batch_axes: tuple
+    head_axes: tuple
+
+
+def attn_supported(q_shape, kv_shape, causal: bool = True,
+                   mode: str | None = None) -> bool:
+    """True when (q, kv) shapes are covered by the fused attention kernels.
+
+    ``kv_shape`` is k's (B, T, K, hd); v may differ only in its last dim.
+    Causal needs T >= S (the rectangular offset T - S would otherwise put
+    queries past the last key).
+    """
+    if (resolve_mode() if mode is None else mode) == "off":
+        return False
+    if len(q_shape) != 4 or len(kv_shape) != 4:
+        return False
+    B, S, H, hd = q_shape
+    if kv_shape[0] != B or kv_shape[3] != hd:
+        return False
+    K = kv_shape[2]
+    if K < 1 or H % K:
+        return False
+    if causal and kv_shape[1] < S:
+        return False
+    return all(d >= 1 for d in tuple(q_shape) + tuple(kv_shape))
+
+
+def _plan_attn(q_sharding, kv_sharding, q_shape, kv_shape):
+    """-> None (single-device) | "ref" | AttnPlan.
+
+    "ref" for layouts the batch/head shard_map cannot express exactly:
+    non-NamedSharding, mismatched meshes, sequence- or head_dim-sharded
+    operands (the seq-sharded decode cache), batch/head axes that differ
+    between q and kv (e.g. MQA kv left replicated by the divisibility
+    guard while q heads are TP-sharded — the kernel's ``q_head // group``
+    indexing assumes aligned shards), or dims not divisible by their mesh
+    axes. The jnp scan partitions those correctly through GSPMD.
+    """
+    if q_sharding is None and kv_sharding is None:
+        return None
+    mesh = None
+    for sh in (q_sharding, kv_sharding):
+        if sh is None:
+            continue
+        if not isinstance(sh, NamedSharding):
+            return "ref"
+        if mesh is not None and sh.mesh != mesh:
+            return "ref"
+        mesh = sh.mesh
+    from repro.models.sharding import spec_mesh_axes
+    qper = spec_mesh_axes(q_sharding.spec, 4) if q_sharding is not None \
+        else ((),) * 4
+    kper = spec_mesh_axes(kv_sharding.spec, 4) if kv_sharding is not None \
+        else ((),) * 4
+    if any(qper[1]) or any(qper[3]) or any(kper[1]) or any(kper[3]):
+        return "ref"  # seq- or head_dim-sharded: GSPMD handles it
+    if qper[0] != kper[0] or qper[2] != kper[2]:
+        return "ref"  # q and kv must shard batch/heads identically
+    batch_axes, head_axes = tuple(qper[0]), tuple(qper[2])
+    if not batch_axes and not head_axes:
+        return None  # replicated: plain single-device semantics are exact
+    kb = _axes_prod(mesh, batch_axes)
+    kh = _axes_prod(mesh, head_axes)
+    if kb is None or kh is None:
+        return "ref"
+    if q_shape[0] % kb or q_shape[2] % kh or kv_shape[2] % kh:
+        return "ref"
+    return AttnPlan(mesh, batch_axes, head_axes)
+
+
+def attn_route(q_shape, kv_shape, causal: bool = True,
+               mode: str | None = None, q_sharding=None, kv_sharding=None):
+    """-> ("ref", None) | ("kernel", None | AttnPlan).
+
+    Callers with their own memory-safe jnp path (``models.layers``) take
+    it on "ref"; ``flash_attention``'s built-in ref delegates back to the
+    layer-level scan/chunked implementations.
+    """
+    if not attn_supported(q_shape, kv_shape, causal, mode):
+        return "ref", None
+    plan = _plan_attn(q_sharding, kv_sharding, q_shape, kv_shape)
+    if plan == "ref":
+        return "ref", None
+    return "kernel", plan
+
+
+def _check_kv_len(causal: bool, kv_len):
+    if causal and kv_len is not None:
+        raise ValueError(
+            "flash_attention: kv_len requires causal=False — the decode "
+            "window is non-causal within the filled cache (neither the "
+            "kernels nor the reference implement a causal-over-fill mask, "
+            "and silently picking one would differ between routes)")
+
+
+def _attn_ref(q, k, v, *, scale, causal: bool = True, kv_len=None):
+    """jnp fallback: the layer-level reference implementations.
+
+    The blockwise ``lax.scan`` (bitwise pre-kernel path) for plain
+    causal/cross attention; ``chunked_q_attention`` when a ``kv_len``
+    cache bound is involved. GQA kv is repeated here — exactly what the
+    kernels avoid.
+    """
+    from repro.models import layers as L  # lazy: avoids an import cycle
+    _check_kv_len(causal, kv_len)
+    if kv_len is not None:
+        return L.chunked_q_attention(
+            q, k, v, L.largest_divisor(q.shape[1], 128), scale,
+            kv_len=kv_len)
+    H, K = q.shape[2], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    return L.flash_attention(q, k, v, 128, scale, causal)
+
+
+@functools.lru_cache(maxsize=None)
+def _attn_fused(scale: float, causal: bool, interp: bool, plan, block):
+    """Build the custom_vjp'd fused attention for one static configuration.
+
+    Cached so repeated traces reuse one custom_vjp object. ``plan`` is an
+    AttnPlan or None; ``block`` a (bq, bk) tuple or None. The traced
+    ``kv_len`` scalar rides along as a custom_vjp argument with a float0
+    cotangent (it is an index bound, like xent's labels).
+    """
+    mesh = plan.mesh if plan is not None else None
+    if plan is not None:
+        bt = tuple(plan.batch_axes) or None
+        hx = tuple(plan.head_axes) or None
+        qspec = P(bt, None, hx, None)   # (B, S|T, H|K, hd) operand layout
+        lspec = P(bt, hx, None)         # (B, H, S) lse layout
+
+    def _fwd_parts(q, k, v, kl):
+        def body(qb, kb, vb, kl_):
+            return _ak.mha_fwd(qb, kb, vb, kl_, scale=scale, causal=causal,
+                               block=block, interpret=interp)
+
+        if plan is None:
+            return body(q, k, v, kl)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(qspec, qspec, qspec, P()),
+                         out_specs=(qspec, lspec), check_rep=False)(
+                             q, k, v, kl)
+
+    def _bwd_parts(q, k, v, kl, out, lse, do):
+        def body(qb, kb, vb, kl_, ob, lseb, dob):
+            delta = jnp.swapaxes(
+                jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32),
+                        -1), 1, 2)
+            dq = _ak.mha_bwd_dq(qb, kb, vb, dob, lseb, delta, kl_,
+                                scale=scale, causal=causal, block=block,
+                                interpret=interp)
+            dk, dv = _ak.mha_bwd_dkv(qb, kb, vb, dob, lseb, delta, kl_,
+                                     scale=scale, causal=causal,
+                                     block=block, interpret=interp)
+            return dq, dk, dv
+
+        if plan is None:
+            return body(q, k, v, kl, out, lse, do)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(qspec, qspec, qspec, P(), qspec, lspec,
+                                   qspec),
+                         out_specs=(qspec, qspec, qspec),
+                         check_rep=False)(q, k, v, kl, out, lse, do)
+
+    @jax.custom_vjp
+    def fused(q, k, v, kl):
+        return _fwd_parts(q, k, v, kl)[0]
+
+    def fwd(q, k, v, kl):
+        out, lse = _fwd_parts(q, k, v, kl)
+        return out, (q, k, v, kl, out, lse)
+
+    def bwd(res, do):
+        q, k, v, kl, out, lse = res
+        dq, dk, dv = _bwd_parts(q, k, v, kl, out, lse, do)
+        return dq, dk, dv, np.zeros(kl.shape, jax.dtypes.float0)
+
+    fused.defvjp(fwd, bwd)
+    return fused
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    scale: float, causal: bool = True, kv_len=None,
+                    block=None, q_sharding=None, kv_sharding=None,
+                    mode: str | None = None):
+    """Fused blockwise attention (custom_vjp, see module doc).
+
+    q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv) with H % K == 0 —
+    the GQA repeat is never materialized (dK/dV come back in kv's own
+    (B, T, K, *) layout). ``causal`` masks rectangularly (query i sees
+    keys <= T-S+i); ``kv_len`` (traced scalar) bounds the key positions
+    for decode over a partially filled cache. Returns (B, S, H, hdv) in
+    q's dtype. ``kv_len`` is only meaningful without causal masking
+    (causal + kv_len raises — no route implements that combination).
+    """
+    mode = resolve_mode() if mode is None else mode
+    _check_kv_len(causal, kv_len)
+    route, plan = attn_route(q.shape, k.shape, causal, mode, q_sharding,
+                             kv_sharding)
+    if route == "ref" or v.shape[:3] != k.shape[:3]:
+        return _attn_ref(q, k, v, scale=scale, causal=causal, kv_len=kv_len)
+    kl = jnp.asarray(k.shape[1] if kv_len is None else kv_len, jnp.int32)
+    return _attn_fused(float(scale), causal, use_interpret(mode), plan,
+                       tuple(block) if block is not None else None)(
+                           q, k, v, kl)
+
+
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate
 # this to keep the parity matrix and the dispatch table in sync.
 REGISTRY = {
@@ -695,4 +955,5 @@ REGISTRY = {
     "momentum_norm": (momentum_norm, _href.momentum_norm),
     "momentum_norm_update": (momentum_norm_update, _href.momentum_norm_update),
     "xent_loss": (xent_loss, _xent_ref),
+    "flash_attention": (flash_attention, _attn_ref),
 }

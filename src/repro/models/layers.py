@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -96,20 +97,66 @@ def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarra
 # intermediates through the scan's autodiff (which would otherwise stack
 # per-tile scores for every pair — the dominant HBM term at 4k+ contexts).
 # All inputs are full-head (B, S, H, hd): GQA repeats kv before the call so
-# the head axis shards cleanly over the TP mesh axis.
+# the head axis shards cleanly over the TP mesh axis. This scan is the
+# **bitwise jnp reference** for the fused Pallas kernels behind
+# ``repro.kernels.dispatch.flash_attention`` (``REPRO_FUSED=off`` or
+# uncovered shapes route back here); the public wrappers below
+# (``causal_blockwise_attention`` / ``cross_blockwise_attention`` /
+# ``decode_attention``) own that routing.
+
+def largest_divisor(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1; O(sqrt n)).
+
+    The shared divisor search behind every blockwise fallback
+    (``_pick_block`` here, ``model._pick_chunk`` for the loss scan):
+    computed directly over the divisor pairs instead of decrementing from
+    ``target``, which silently walked prime sizes down to 1.
+    """
+    target = min(target, n)
+    best, d = 1, 1
+    while d * d <= n:
+        if n % d == 0:
+            for c in (d, n // d):
+                if best < c <= target:
+                    best = c
+        d += 1
+    return best
+
 
 def _pick_block(S: int, T: int, block: int) -> int:
-    b = min(block, S, T)
-    while b > 1 and (S % b or T % b):
-        b -= 1
-    return max(b, 1)
+    """Largest common divisor block of (S, T) that is <= ``block`` — and
+    *audibly*: a prime or awkward length used to silently degrade to
+    block=1 (the same failure mode as the pre-PR-3 ``chunk -= 1``),
+    turning the tile scan into a per-position loop. Warns whenever the
+    usable block falls below half the requested size.
+    """
+    target = max(min(block, S, T), 1)
+    best = largest_divisor(math.gcd(S, T), target)
+    if best * 2 < target:
+        warnings.warn(
+            f"blockwise attention: (S={S}, T={T}) share no divisor in "
+            f"({target // 2}, {target}]; the tile shrinks to {best} "
+            f"({(S // best) * (T // best)} candidate tile pairs). Pick "
+            f"lengths with a common divisor near block={target} to keep "
+            f"the scan short.", stacklevel=3)
+    return best
 
 
-def _tile_pairs(nq: int, nk: int, causal: bool) -> np.ndarray:
+def _tile_pairs(nq: int, nk: int, causal: bool, block: int = 1,
+                offset: int = 0) -> np.ndarray:
+    """(q tile, kv tile) index pairs; causal drops fully-masked pairs.
+
+    Causal is *rectangular*: with ``offset = T - S >= 0`` query ``i``
+    attends keys ``j <= offset + i`` (a cached-prefill continuation whose
+    query block sits at the end of the key range; ``offset = 0`` is
+    ordinary causal, where this reduces to the lower triangle). A pair
+    survives iff its last query position reaches its first key position.
+    """
     if causal:
-        assert nq == nk
-        return np.array([(qi, ki) for qi in range(nq) for ki in range(qi + 1)],
-                        dtype=np.int32)
+        return np.array(
+            [(qi, ki) for qi in range(nq) for ki in range(nk)
+             if ki * block <= offset + (qi + 1) * block - 1],
+            dtype=np.int32)
     return np.array([(qi, ki) for qi in range(nq) for ki in range(nk)],
                     dtype=np.int32)
 
@@ -123,12 +170,21 @@ def _shard_flash(x, axes):
     return shard(x, axes, _FLASH_RULES)
 
 
+def _causal_offset(S: int, T: int, causal: bool) -> int:
+    if causal and T < S:
+        raise ValueError(
+            f"causal flash attention needs T >= S (got S={S}, T={T}): "
+            f"queries past the last key would have no valid positions")
+    return T - S if causal else 0
+
+
 def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
     B, S, H, hd = q.shape
     T = k.shape[1]
     hdv = v.shape[-1]
+    offset = _causal_offset(S, T, causal)
     block = _pick_block(S, T, block)
-    pairs = _tile_pairs(S // block, T // block, causal)
+    pairs = _tile_pairs(S // block, T // block, causal, block, offset)
 
     acc0 = _shard_flash(jnp.zeros((B, S, H, hdv), jnp.float32),
                         ("act_batch", None, "act_heads", None))
@@ -145,7 +201,7 @@ def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
         vb = jax.lax.dynamic_slice_in_dim(v, ks, block, 1)
         s = jnp.einsum("bqhd,bshd->bhqs", qb, kb).astype(jnp.float32) * scale
         if causal:
-            qpos = qs + jnp.arange(block)
+            qpos = offset + qs + jnp.arange(block)
             kpos = ks + jnp.arange(block)
             s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
         accb = jnp.swapaxes(jax.lax.dynamic_slice_in_dim(acc, qs, block, 1), 1, 2)
@@ -175,7 +231,13 @@ def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, block: int, scale: float, causal: bool):
-    """Memory-O(S*d) blockwise attention. q,k,v (B,S,H,hd) / (B,T,H,hd)."""
+    """Memory-O(S*d) blockwise attention. q,k,v (B,S,H,hd) / (B,T,H,hd).
+
+    ``causal`` masks rectangularly when T > S (query ``i`` sees keys
+    ``j <= (T - S) + i`` — a cached-prefill continuation); T == S is
+    ordinary causal. This jnp scan is the bitwise reference path for the
+    fused kernels (see the section comment above).
+    """
     return _flash_forward(q, k, v, block, scale, causal)[0]
 
 
@@ -188,8 +250,9 @@ def _flash_bwd_rule(block, scale, causal, res, dout):
     q, k, v, out, lse = res
     B, S, H, hd = q.shape
     T = k.shape[1]
+    offset = _causal_offset(S, T, causal)
     block_ = _pick_block(S, T, block)
-    pairs = _tile_pairs(S // block_, T // block_, causal)
+    pairs = _tile_pairs(S // block_, T // block_, causal, block_, offset)
     # D_i = sum_d dout_i * out_i  (B,S,H)
     Dsum = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
 
@@ -213,7 +276,7 @@ def _flash_bwd_rule(block, scale, causal, res, dout):
             jax.lax.dynamic_slice_in_dim(Dsum, qs, block_, 1), 1, 2)
         s = jnp.einsum("bqhd,bshd->bhqs", qb, kb).astype(jnp.float32) * scale
         if causal:
-            qpos = qs + jnp.arange(block_)
+            qpos = offset + qs + jnp.arange(block_)
             kpos = ks + jnp.arange(block_)
             s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
         p = jnp.exp(s - lseb[..., None])                     # (B,H,q,s)
@@ -242,22 +305,100 @@ def _flash_bwd_rule(block, scale, causal, res, dout):
 flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
-def causal_blockwise_attention(q, k, v, block: int, scale: float) -> jnp.ndarray:
-    """Causal flash attention; kv may have fewer heads (repeated to match)."""
+def _route_attention(q, k, v, scale: float, *, causal: bool, kv_len=None,
+                     rules: Optional[Rules] = None, mesh=None,
+                     kv_axes=("act_batch", None, "act_heads", None)):
+    """Fused-kernel route for one attention call (None -> caller's jnp path).
+
+    Mirrors ``model.lm_loss``'s xent routing: resolve REPRO_FUSED once,
+    derive the q/kv NamedShardings from the logical rules when a mesh is
+    given (``kv_axes`` lets the decode path describe its cache layout),
+    and only call the dispatch entry point when it will actually run the
+    kernels — the callers keep their own scan/chunked reference paths.
+    """
+    from repro.kernels import dispatch as _kd  # lazy: optional kernel layer
+    q_sh = kv_sh = None
+    if mesh is not None and rules is not None:
+        q_sh = rules.sharding(("act_batch", None, "act_heads", None), mesh,
+                              q.shape)
+        kv_sh = rules.sharding(kv_axes, mesh, k.shape)
+    mode = _kd.resolve_mode()
+    route, _ = _kd.attn_route(q.shape, k.shape, causal, mode, q_sh, kv_sh)
+    if route != "kernel" or v.shape[:3] != k.shape[:3]:
+        return None
+    return _kd.flash_attention(q, k, v, scale=scale, causal=causal,
+                               kv_len=kv_len, q_sharding=q_sh,
+                               kv_sharding=kv_sh, mode=mode)
+
+
+def causal_blockwise_attention(q, k, v, block: int, scale: float, *,
+                               rules: Optional[Rules] = None,
+                               mesh=None) -> jnp.ndarray:
+    """Causal flash attention; kv may have fewer heads (GQA).
+
+    Fused route (default where covered): the Pallas kernels behind
+    ``dispatch.flash_attention`` index the kv block by ``q_head // group``
+    natively — the H/K repeat is never materialized, and under ``mesh``
+    the kernels shard_map over the activation batch/head axes. Reference
+    route (``REPRO_FUSED=off`` / uncovered): repeat kv to full heads (so
+    the head axis TP-shards cleanly) and run the jnp scan — the bitwise
+    pre-kernel path.
+    """
+    out = _route_attention(q, k, v, scale, causal=True, rules=rules,
+                           mesh=mesh)
+    if out is not None:
+        return out
     H, K = q.shape[2], k.shape[2]
     if K != H:
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
+        if rules is not None:
+            k = shard(k, ("act_batch", None, "act_heads", None), rules)
+            v = shard(v, ("act_batch", None, "act_heads", None), rules)
     return flash_attention(q, k, v, block, scale, True)
 
 
-def cross_blockwise_attention(q, k, v, block: int, scale: float) -> jnp.ndarray:
-    """Non-causal flash attention (cross-attention over image tokens)."""
+def cross_blockwise_attention(q, k, v, block: int, scale: float, *,
+                              rules: Optional[Rules] = None,
+                              mesh=None) -> jnp.ndarray:
+    """Non-causal flash attention (cross-attention over image tokens).
+
+    Routed like :func:`causal_blockwise_attention` (kernels where
+    covered, repeated-kv jnp scan otherwise).
+    """
+    out = _route_attention(q, k, v, scale, causal=False, rules=rules,
+                           mesh=mesh)
+    if out is not None:
+        return out
     H, K = q.shape[2], k.shape[2]
     if K != H:
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
+        if rules is not None:
+            k = shard(k, ("act_batch", None, "act_heads", None), rules)
+            v = shard(v, ("act_batch", None, "act_heads", None), rules)
     return flash_attention(q, k, v, block, scale, False)
+
+
+def decode_attention(q, k, v, q_block: int, scale: float, kv_len=None, *,
+                     rules: Optional[Rules] = None, mesh=None,
+                     kv_axes=("cache_batch", "cache_seq", None,
+                              "cache_kv")) -> jnp.ndarray:
+    """Attention over a T-length cache (decode / single-query cross-attn).
+
+    Kernel route: the flash kernels run the rectangular (S=1..block, T)
+    problem with the traced ``kv_len`` bound folded into the tile masks —
+    tiles past the cache fill skip their compute entirely. The
+    sequence-sharded decode cache (``cache_seq -> "model"``) is not
+    expressible as a batch/head shard_map plan, so under such a mesh this
+    falls back to :func:`chunked_q_attention`, which GSPMD partitions
+    over the sharded T with small lse all-reduces.
+    """
+    out = _route_attention(q, k, v, scale, causal=False, kv_len=kv_len,
+                           rules=rules, mesh=mesh, kv_axes=kv_axes)
+    if out is not None:
+        return out
+    return chunked_q_attention(q, k, v, q_block, scale, kv_len=kv_len)
 
 
 def chunked_q_attention(q, k, v, q_block: int, scale: float,
@@ -311,10 +452,13 @@ def attn_spec(cfg: ModelConfig, cross: bool = False) -> dict:
 def apply_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
                     mode: str = "train", cache: Optional[dict] = None,
                     cache_index=None, kv_source: Optional[jnp.ndarray] = None,
-                    causal: bool = True):
+                    causal: bool = True, mesh=None):
     """GQA self-attention (or cross-attention when ``kv_source`` is given).
 
-    mode: train | prefill | decode. Returns (y, new_cache).
+    mode: train | prefill | decode. Returns (y, new_cache). ``mesh``
+    (threaded from the trainer/serving factories, feature-detected like
+    the loss's) lets the fused attention kernels shard_map over the
+    activation batch/head axes.
     """
     B, S, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -349,21 +493,24 @@ def apply_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
         ck = shard(ck, ("cache_batch", "cache_seq", None, "cache_kv"), rules)
         cv = shard(cv, ("cache_batch", "cache_seq", None, "cache_kv"), rules)
         new_cache = {"k": ck, "v": cv}
-        out = chunked_q_attention(q, ck, cv, cfg.attn_q_block, scale,
-                                  kv_len=cache_index + S)
+        out = decode_attention(q, ck, cv, cfg.attn_q_block, scale,
+                               kv_len=cache_index + S, rules=rules,
+                               mesh=mesh)
     elif kv_source is not None and S == 1:
-        out = chunked_q_attention(q, k, v, cfg.attn_q_block, scale)
+        out = decode_attention(q, k, v, cfg.attn_q_block, scale, rules=rules,
+                               mesh=mesh,
+                               kv_axes=("act_batch", None, "act_heads", None))
     else:
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
-        if K != H:  # expand GQA kv so the head axis TP-shards cleanly
-            k = jnp.repeat(k, H // K, axis=2)
-            v = jnp.repeat(v, H // K, axis=2)
         q = shard(q, ("act_batch", "act_seq", "act_heads", None), rules)
         k = shard(k, ("act_batch", None, "act_heads", None), rules)
         v = shard(v, ("act_batch", None, "act_heads", None), rules)
-        out = flash_attention(q, k, v, cfg.attn_kv_block, scale,
-                              kv_source is None)
+        # GQA expansion (kernel route: never; ref route: repeat so the
+        # head axis TP-shards cleanly) lives inside the wrappers
+        fn = (causal_blockwise_attention if kv_source is None
+              else cross_blockwise_attention)
+        out = fn(q, k, v, cfg.attn_kv_block, scale, rules=rules, mesh=mesh)
 
     out = out.reshape(B, S, H * hd)
     y = out @ p["wo"]
@@ -388,7 +535,8 @@ def mla_spec(cfg: ModelConfig) -> dict:
 
 
 def apply_mla_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
-                        mode: str = "train", cache=None, cache_index=None):
+                        mode: str = "train", cache=None, cache_index=None,
+                        mesh=None):
     """Multi-head Latent Attention (DeepSeek-V2/V3).
 
     Caches only the compressed kv latent (kv_lora_rank) + shared rope key —
@@ -449,7 +597,11 @@ def apply_mla_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
         q_full = shard(q_full, ("act_batch", "act_seq", "act_heads", None), rules)
         k_full = shard(k_full, ("act_batch", None, "act_heads", None), rules)
         vv = shard(vv, ("act_batch", None, "act_heads", None), rules)
-        out = flash_attention(q_full, k_full, vv, cfg.attn_kv_block, scale, True)
+        # full-head (H == K) causal attention; the kernel route also
+        # covers MLA's asymmetric head dims (qk qn+qr vs value vd)
+        out = causal_blockwise_attention(q_full, k_full, vv,
+                                         cfg.attn_kv_block, scale,
+                                         rules=rules, mesh=mesh)
     y = out.reshape(B, S, H * vd) @ p["wo"]
     return shard(y, ("act_batch", "act_seq", "act_embed"), rules), new_cache
 

@@ -140,8 +140,13 @@ def cache_logical_axes(cfg: ModelConfig) -> dict:
 
 def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
             mode: str = "train", cache=None, cache_index=None,
-            rules: Optional[Rules] = None):
-    """Run the backbone. Returns (hidden, new_cache, aux_loss)."""
+            rules: Optional[Rules] = None, mesh=None):
+    """Run the backbone. Returns (hidden, new_cache, aux_loss).
+
+    ``mesh`` (optional, threaded from the trainer/serving factories the
+    same way ``loss_fn`` receives it) reaches the attention layers so the
+    fused flash kernels can shard_map over the batch/head mesh axes.
+    """
     rules = rules or Rules(cfg.rule_overrides)
     ew = params["tok_embed"]["w"]
     if cfg.family == "audio":
@@ -167,7 +172,7 @@ def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
         seg_cache = cache[name] if cache is not None else None
         x, seg_cache, seg_aux = T.apply_segment(
             kind, n, cfg, params["segments"][name], x, positions, rules,
-            mode, seg_cache, cache_index, image_embeds)
+            mode, seg_cache, cache_index, image_embeds, mesh=mesh)
         if new_cache is not None:
             new_cache[name] = seg_cache
         aux = aux + seg_aux
@@ -218,19 +223,13 @@ def _mask_pad_vocab(logits, cfg: ModelConfig):
 def _pick_chunk(S: int, target: int) -> int:
     """Largest divisor of S that is <= min(target, S).
 
-    Computed directly over the divisor pairs (O(sqrt S), shapes are
-    static) instead of decrementing from ``target`` — and *audibly*: a
-    prime or awkward S used to silently degrade to chunk=1, turning the
-    loss scan into a per-token loop with an (S,)-step trace.
+    Delegates the divisor search to ``layers.largest_divisor`` (shared
+    with the attention tile fallback ``layers._pick_block``) — and stays
+    *audible*: a prime or awkward S used to silently degrade to chunk=1,
+    turning the loss scan into a per-token loop with an (S,)-step trace.
     """
     target = min(target, S)
-    best, d = 1, 1
-    while d * d <= S:
-        if S % d == 0:
-            for c in (d, S // d):
-                if best < c <= target:
-                    best = c
-        d += 1
+    best = L.largest_divisor(S, target)
     if best * 2 < target:
         warnings.warn(
             f"lm_loss: seq_len={S} has no divisor in ({target // 2}, "
@@ -350,11 +349,12 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, aux_coef: float = 0.01,
     """Full training loss. batch: tokens, labels, [image_embeds].
 
     ``mesh`` is forwarded to :func:`lm_loss` for the mesh-aware fused
-    cross-entropy; callers (the trainer) feature-detect this kwarg.
+    cross-entropy AND to :func:`forward` for the mesh-aware fused
+    attention; callers (the trainer) feature-detect this kwarg.
     """
     hidden, _, aux = forward(params, cfg, batch["tokens"],
                              image_embeds=batch.get("image_embeds"),
-                             mode="train", rules=rules)
+                             mode="train", rules=rules, mesh=mesh)
     loss, weight = lm_loss(params, cfg, hidden, batch["labels"], rules=rules,
                            mesh=mesh)
     total = loss + aux_coef * aux

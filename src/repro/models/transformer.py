@@ -44,20 +44,28 @@ def _sub_spec(cfg: ModelConfig, sub: str) -> dict:
 
 
 def _apply_sub(sub: str, p: dict, cfg: ModelConfig, x, positions, rules: Rules,
-               mode: str, cache, cache_index, image_embeds):
-    """Pre-norm residual sub-layer. Returns (x, new_cache, aux)."""
+               mode: str, cache, cache_index, image_embeds, mesh=None):
+    """Pre-norm residual sub-layer. Returns (x, new_cache, aux).
+
+    ``mesh`` rides along to the attention layers so the fused flash
+    kernels can shard_map over the activation batch/head axes (the same
+    feature-detected plumbing the fused LM-head loss uses).
+    """
     h = L.rmsnorm(x, p["norm"], cfg.rms_eps)
     aux = jnp.zeros((), jnp.float32)
     if sub == "attn":
         if cfg.attention_kind == "mla":
             y, cache = L.apply_mla_attention(p, cfg, h, positions, rules,
-                                             mode, cache, cache_index)
+                                             mode, cache, cache_index,
+                                             mesh=mesh)
         else:
             y, cache = L.apply_attention(p, cfg, h, positions, rules,
-                                         mode, cache, cache_index)
+                                         mode, cache, cache_index,
+                                         mesh=mesh)
     elif sub == "cross":
         y, _ = L.apply_attention(p, cfg, h, positions, rules, mode="train",
-                                 kv_source=image_embeds, causal=False)
+                                 kv_source=image_embeds, causal=False,
+                                 mesh=mesh)
     elif sub == "mlp":
         y = L.apply_mlp(p, cfg, h, rules)
     elif sub == "moe":
@@ -144,14 +152,14 @@ def cache_axes(cfg: ModelConfig, kind: str) -> dict:
 
 def apply_superblock(kind: str, cfg: ModelConfig, params: dict, x, positions,
                      rules: Rules, mode: str, cache: Optional[dict],
-                     cache_index, image_embeds):
+                     cache_index, image_embeds, mesh=None):
     new_cache = dict(cache) if cache is not None else None
     aux_total = jnp.zeros((), jnp.float32)
     for name, sub in superblock_layout(cfg, kind):
         sub_cache = cache.get(name) if (cache is not None and _needs_cache(sub)) else None
         x, sub_cache, aux = _apply_sub(sub, params[name], cfg, x, positions,
                                        rules, mode, sub_cache, cache_index,
-                                       image_embeds)
+                                       image_embeds, mesh=mesh)
         if new_cache is not None and _needs_cache(sub) and sub_cache is not None:
             new_cache[name] = sub_cache
         aux_total = aux_total + aux
@@ -172,13 +180,13 @@ def _remat_policy(cfg: ModelConfig):
 
 def apply_segment(kind: str, n_blocks: int, cfg: ModelConfig, stacked: dict,
                   x, positions, rules: Rules, mode: str, cache, cache_index,
-                  image_embeds):
+                  image_embeds, mesh=None):
     """Scan ``n_blocks`` super-blocks with stacked params (+ stacked cache)."""
 
     def block(x, inputs):
         p, c = inputs
         x, c, aux = apply_superblock(kind, cfg, p, x, positions, rules, mode,
-                                     c, cache_index, image_embeds)
+                                     c, cache_index, image_embeds, mesh=mesh)
         return x, (c, aux)
 
     policy = _remat_policy(cfg)
@@ -194,7 +202,8 @@ def apply_segment(kind: str, n_blocks: int, cfg: ModelConfig, stacked: dict,
         def block_nc(x, inputs):
             p, _ = inputs
             x, _, aux = apply_superblock(kind, cfg, p, x, positions, rules,
-                                         mode, None, cache_index, image_embeds)
+                                         mode, None, cache_index,
+                                         image_embeds, mesh=mesh)
             return x, aux
 
         body = jax.checkpoint(block_nc, policy=policy, prevent_cse=False) \

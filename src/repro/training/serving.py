@@ -18,10 +18,13 @@ class ServeState(NamedTuple):
     index: jnp.ndarray  # current cache fill (next write position)
 
 
-def make_prefill_step(cfg, max_seq: int, rules: Optional[Rules] = None):
+def make_prefill_step(cfg, max_seq: int, rules: Optional[Rules] = None,
+                      mesh=None):
     """prefill(params, tokens[, image_embeds]) -> (ServeState, last_logits).
 
-    The returned cache is sized ``max_seq`` so decode can continue in place.
+    The returned cache is sized ``max_seq`` so decode can continue in
+    place. ``mesh`` reaches the attention layers for the mesh-aware fused
+    flash kernels (feature-detected plumbing, like the trainer's loss).
     """
     rules = rules or Rules(cfg.rule_overrides)
 
@@ -32,7 +35,7 @@ def make_prefill_step(cfg, max_seq: int, rules: Optional[Rules] = None):
         hidden, pre_cache, _ = forward(params, cfg, tokens,
                                        image_embeds=image_embeds,
                                        mode="prefill", cache=cache,
-                                       rules=rules)
+                                       rules=rules, mesh=mesh)
 
         def merge(full, pre):
             if full.shape == pre.shape:
@@ -47,15 +50,21 @@ def make_prefill_step(cfg, max_seq: int, rules: Optional[Rules] = None):
     return prefill_step
 
 
-def make_decode_step(cfg, rules: Optional[Rules] = None):
-    """decode(params, state, tokens) -> (state, logits). tokens (B, 1)."""
+def make_decode_step(cfg, rules: Optional[Rules] = None, mesh=None):
+    """decode(params, state, tokens) -> (state, logits). tokens (B, 1).
+
+    Single-device decode routes attention over the cache through the
+    fused flash kernels (the ``kv_len`` bound skips unfilled cache
+    tiles); under a mesh the sequence-sharded cache falls back to the
+    GSPMD-partitioned chunked path (see ``layers.decode_attention``).
+    """
     rules = rules or Rules(cfg.rule_overrides)
 
     def decode_step(params, state: ServeState, tokens, image_embeds=None):
         hidden, cache, _ = forward(params, cfg, tokens,
                                    image_embeds=image_embeds, mode="decode",
                                    cache=state.cache, cache_index=state.index,
-                                   rules=rules)
+                                   rules=rules, mesh=mesh)
         logits = logits_from_hidden(params, cfg, hidden, rules=rules)
         return ServeState(cache, state.index + tokens.shape[-1]), logits
 
@@ -63,10 +72,10 @@ def make_decode_step(cfg, rules: Optional[Rules] = None):
 
 
 def greedy_generate(cfg, params, prompt, n_steps: int, max_seq: int,
-                    rules: Optional[Rules] = None):
+                    rules: Optional[Rules] = None, mesh=None):
     """Greedy generation loop (prefill + jitted decode steps)."""
-    prefill = jax.jit(make_prefill_step(cfg, max_seq, rules))
-    decode = jax.jit(make_decode_step(cfg, rules))
+    prefill = jax.jit(make_prefill_step(cfg, max_seq, rules, mesh=mesh))
+    decode = jax.jit(make_decode_step(cfg, rules, mesh=mesh))
     state, logits = prefill(params, prompt)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]

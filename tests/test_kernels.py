@@ -115,17 +115,20 @@ def test_registry_covers_every_op():
     dispatch.py without a REGISTRY entry (or vice versa) fails this test.
     """
     public_ops = {"normalize", "norm_update", "momentum_norm",
-                  "momentum_norm_update", "xent_loss"}
+                  "momentum_norm_update", "xent_loss", "flash_attention"}
     assert set(dispatch.REGISTRY) == public_ops
     th, g, m = _mk((50, 257), jnp.float32, 21)
     h = jax.random.normal(jax.random.PRNGKey(22), (40, 50))
     lab = jax.random.randint(jax.random.PRNGKey(23), (40,), -1, 250)
+    aq = jax.random.normal(jax.random.PRNGKey(24), (2, 16, 4, 8))
+    akv = jax.random.normal(jax.random.PRNGKey(25), (2, 16, 2, 8))
     args = {
         "normalize": ((g,), {}),
         "norm_update": ((th, g, 0.01), {}),
         "momentum_norm": ((m, g, 0.9), {}),
         "momentum_norm_update": ((th, m, g, 0.9, 0.01), {}),
         "xent_loss": ((h, th, lab), {"vocab_size": 250}),
+        "flash_attention": ((aq, akv, akv), {"scale": 0.35, "causal": True}),
     }
     for op, (fused_fn, ref_fn) in dispatch.REGISTRY.items():
         a, kw = args[op]
