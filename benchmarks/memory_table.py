@@ -1,72 +1,13 @@
-"""Paper Table 4 + Appendix B: optimizer memory for LLaMA 1B/7B, ours vs the
-paper's published numbers, the assigned-architecture zoo, and the
-tied-embedding rows at 60M (the regime where the head is the largest single
-matrix, so tying shrinks the table the most)."""
+"""Back-compat shim: the Table-4 / Appendix-B memory rows moved into
+``benchmarks/optimizer_bench.py`` (the merged head-to-head harness)."""
 from __future__ import annotations
 
-import dataclasses
-
-from repro.configs import ARCH_IDS, LLAMA_PAPER, get_arch
-from repro.core import memory_report
-from repro.core.labels import LabelRules
-from repro.models import param_shapes
-
-PAPER = {  # (model, method) -> GB from Appendix B
-    ("llama-7b", "sgd"): 13.476, ("llama-7b", "adam"): 40.428,
-    ("llama-7b", "muon"): 26.952, ("llama-7b", "swan"): 14.524,
-    ("llama-7b", "apollo"): 16.144, ("llama-7b", "apollo_mini"): 14.531,
-    ("llama-7b", "scale"): 13.738,
-    ("llama-1b", "sgd"): 2.678, ("llama-1b", "adam"): 8.034,
-    ("llama-1b", "muon"): 5.356, ("llama-1b", "swan"): 3.202,
-    ("llama-1b", "apollo_mini"): 3.20, ("llama-1b", "scale"): 2.809,
-}
-
-METHODS = ("sgd", "adam", "muon", "swan", "galore", "fira", "apollo",
-           "apollo_mini", "scale")
-
-
-def tied_rows(model: str = "llama-60m"):
-    """weights/state/total for scale + adam with tying off vs on.
-
-    The tied shapes tree has no ``lm_head`` leaf (counted once), and
-    ``LabelRules.tied()`` keeps SCALE's momentum on the tied matrix, so
-    tying saves the head's weight bytes while the optimizer state is
-    unchanged (the momentum moves, it does not disappear).
-    """
-    rows = []
-    for tied in (False, True):
-        cfg = dataclasses.replace(get_arch(model), tie_embeddings=tied)
-        shapes = param_shapes(cfg)
-        rules = LabelRules.tied() if tied else None
-        for m in ("scale", "adam", "sgd"):
-            w, s, t = memory_report(shapes, m, rules=rules).gb()
-            rows.append((f"tied/{model}/{'tied' if tied else 'untied'}/{m}",
-                         None, f"weights={w:.3f}G state={s:.3f}G "
-                               f"total={t:.3f}G"))
-    return rows
+from .optimizer_bench import (ACCOUNTING, METHODS, PAPER, memory_rows,
+                              tied_rows)
 
 
 def run(quick: bool = True):
-    rows = []
-    for model in ("llama-1b", "llama-7b"):
-        shapes = param_shapes(get_arch(model))
-        for m in METHODS:
-            ours = memory_report(shapes, m).gb()[2]
-            ref = PAPER.get((model, m))
-            derived = (f"ours={ours:.3f}G paper={ref:.3f}G "
-                       f"diff={100*(ours-ref)/ref:+.1f}%" if ref
-                       else f"ours={ours:.3f}G")
-            rows.append((f"table4/{model}/{m}", None, derived))
-    rows += tied_rows()
-    if not quick:
-        for arch in ARCH_IDS:
-            shapes = param_shapes(get_arch(arch))
-            adam = memory_report(shapes, "adam").gb()[2]
-            scale = memory_report(shapes, "scale").gb()[2]
-            rows.append((f"memory_zoo/{arch}", None,
-                         f"scale={scale:.1f}G adam={adam:.1f}G "
-                         f"ratio={scale/adam:.2f}"))
-    return rows
+    return memory_rows(quick=quick)
 
 
 if __name__ == "__main__":

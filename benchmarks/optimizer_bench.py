@@ -1,0 +1,370 @@
+"""Head-to-head optimizer bench: the whole registry zoo on one harness.
+
+Merges the former ``memory_table.py`` (paper Table 4 / Appendix B analytic
+memory) and ``pretrain_proxy.py`` (CPU-scale perplexity proxies for Tables
+2/3/5/8/11/13) and adds the head-to-head sweep: every ``OPTIMIZER_REGISTRY``
+entry trains the same proxy LLaMA and reports, per optimizer,
+
+  * ``final_loss`` / ``eval_ppl`` — last-step training loss and the averaged
+    eval perplexity (the paper's ordering claim, not absolute C4 numbers);
+  * ``state_bytes`` — *measured* optimizer-state footprint on the proxy
+    params (``jax.eval_shape`` over ``tx.init``, summed over leaves);
+  * ``llama1b_gb`` — the analytic Appendix-B footprint at LLaMA-1B scale
+    (bf16 protocol; this is where the paper's Adam > GaLore > APOLLO >
+    SCALE ordering is asserted — the proxy model is too small for it);
+  * ``step_time_us`` — median jitted train-step wall time, with
+    ``fused_off_unless_tpu`` so off-TPU numbers benchmark compiled XLA,
+    not the Pallas interpreter;
+  * ``hbm_passes`` — analytic full-matrix HBM passes per step under the
+    ``benchmarks/fused_update.py`` convention (fused where the composition
+    lowers to the Pallas kernels: stateless 4 vs 6, momentum 6 vs 9 per
+    matrix; compositions with Adam-style state count as momentum rows).
+
+``--tiny --json PATH`` is the CI bench-smoke entry (10 steps, seq 32,
+batch 8) and what generates the committed ``BENCH_optimizers.json``.
+The old module entry points survive as delegating shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import ARCH_IDS, LLAMA_PAPER, get_arch
+from repro.core import (OPTIMIZER_REGISTRY, linear_warmup_cosine,
+                        make_optimizer, memory_report)
+from repro.core.labels import LabelRules, label_tree
+from repro.core.scale import scale as make_scale
+from repro.data import make_dataset
+from repro.models import ModelConfig, init_params, param_shapes
+from repro.training import init_state, make_eval_step, make_train_step
+
+from .common import emit, fused_off_unless_tpu, time_call
+
+# --------------------------------------------------------------------------
+# Analytic memory (paper Table 4 / Appendix B) — formerly memory_table.py
+# --------------------------------------------------------------------------
+
+PAPER = {  # (model, method) -> GB from Appendix B
+    ("llama-7b", "sgd"): 13.476, ("llama-7b", "adam"): 40.428,
+    ("llama-7b", "muon"): 26.952, ("llama-7b", "swan"): 14.524,
+    ("llama-7b", "apollo"): 16.144, ("llama-7b", "apollo_mini"): 14.531,
+    ("llama-7b", "scale"): 13.738,
+    ("llama-1b", "sgd"): 2.678, ("llama-1b", "adam"): 8.034,
+    ("llama-1b", "muon"): 5.356, ("llama-1b", "swan"): 3.202,
+    ("llama-1b", "apollo_mini"): 3.20, ("llama-1b", "scale"): 2.809,
+}
+
+METHODS = ("sgd", "adam", "muon", "swan", "galore", "fira", "apollo",
+           "apollo_mini", "scale")
+
+# registry name -> Appendix-B accounting method (vector Adam moments of the
+# sgd_*norm ablations are negligible, so they bill as plain sgd)
+ACCOUNTING = {"scale_fused": "scale", "sgd_momentum": "sgd_momentum",
+              "sgd_colnorm": "sgd", "sgd_rownorm": "sgd",
+              "sgd_signnorm": "sgd", "sgd_nsnorm": "sgd",
+              "sgd_svdnorm": "sgd"}
+
+
+def tied_rows(model: str = "llama-60m"):
+    """weights/state/total for scale + adam with tying off vs on.
+
+    The tied shapes tree has no ``lm_head`` leaf (counted once), and
+    ``LabelRules.tied()`` keeps SCALE's momentum on the tied matrix, so
+    tying saves the head's weight bytes while the optimizer state is
+    unchanged (the momentum moves, it does not disappear).
+    """
+    rows = []
+    for tied in (False, True):
+        cfg = dataclasses.replace(get_arch(model), tie_embeddings=tied)
+        shapes = param_shapes(cfg)
+        rules = LabelRules.tied() if tied else None
+        for m in ("scale", "adam", "sgd"):
+            w, s, t = memory_report(shapes, m, rules=rules).gb()
+            rows.append((f"tied/{model}/{'tied' if tied else 'untied'}/{m}",
+                         None, f"weights={w:.3f}G state={s:.3f}G "
+                               f"total={t:.3f}G"))
+    return rows
+
+
+def memory_rows(quick: bool = True):
+    rows = []
+    for model in ("llama-1b", "llama-7b"):
+        shapes = param_shapes(get_arch(model))
+        for m in METHODS:
+            ours = memory_report(shapes, m).gb()[2]
+            ref = PAPER.get((model, m))
+            derived = (f"ours={ours:.3f}G paper={ref:.3f}G "
+                       f"diff={100*(ours-ref)/ref:+.1f}%" if ref
+                       else f"ours={ours:.3f}G")
+            rows.append((f"table4/{model}/{m}", None, derived))
+    rows += tied_rows()
+    if not quick:
+        for arch in ARCH_IDS:
+            shapes = param_shapes(get_arch(arch))
+            adam = memory_report(shapes, "adam").gb()[2]
+            scale = memory_report(shapes, "scale").gb()[2]
+            rows.append((f"memory_zoo/{arch}", None,
+                         f"scale={scale:.1f}G adam={adam:.1f}G "
+                         f"ratio={scale/adam:.2f}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Pretraining proxy (Tables 2/3/5/8/11/13) — formerly pretrain_proxy.py
+# --------------------------------------------------------------------------
+
+def proxy_cfg():
+    return ModelConfig(name="llama-proxy", family="dense", n_layers=4,
+                       d_model=128, n_heads=4, n_kv_heads=4, d_ff=344,
+                       vocab_size=512, dtype="float32", attn_kv_block=64,
+                       attn_q_block=64, loss_chunk=64)
+
+
+def _train(tx, steps: int, seed: int = 0, seq: int = 64, batch: int = 16):
+    """Train the proxy model; returns (state, step_fn, ds, final_loss)."""
+    cfg = proxy_cfg()
+    state = init_state(init_params(jax.random.PRNGKey(seed), cfg), tx)
+    step_fn = jax.jit(make_train_step(cfg, tx, clip_norm=1.0))
+    ds = make_dataset(cfg, seq_len=seq, global_batch=batch, seed=seed)
+    loss = float("nan")
+    for i in range(steps):
+        state, metrics = step_fn(state, ds.host_batch_at(i))
+    loss = float(metrics["loss"])
+    return state, step_fn, ds, loss
+
+
+def _eval_ppl(state, ds) -> float:
+    ev = jax.jit(make_eval_step(proxy_cfg()))
+    ppl = 0.0
+    for j in range(4):
+        ppl += float(ev(state.params,
+                        ds.host_batch_at(100_000 + j))["perplexity"])
+    return ppl / 4
+
+
+def pretrain(tx, steps: int, seed: int = 0, seq: int = 64, batch: int = 16):
+    state, _, ds, _ = _train(tx, steps, seed=seed, seq=seq, batch=batch)
+    return _eval_ppl(state, ds)
+
+
+# per-method peak lr, mirroring the paper's per-optimizer sweeps (App. C).
+# Normalized-SGD updates have per-column magnitude == lr, so their optimum
+# sits ~3x higher than Adam's on this proxy.
+LRS = {"sgd": 1e-1, "adam": 3e-3, "stable_spam": 3e-3, "muon": 3e-3,
+       "swan": 3e-3, "galore": 3e-3, "fira": 3e-3, "apollo": 3e-3,
+       "apollo_mini": 3e-3, "scale": 1e-2, "sgd_colnorm": 1e-2,
+       "sgd_rownorm": 1e-2, "sgd_signnorm": 3e-3, "sgd_nsnorm": 1e-2,
+       "sgd_svdnorm": 1e-2, "scale_fused": 1e-2, "sgd_momentum": 1e-1,
+       "adamw": 3e-3}
+
+# proxy-scale kwargs: galore-family rank 256 would swamp the 128-d proxy
+# matrices (rank >= min dim = plain Adam), so the proxy sweeps use rank 16
+PROXY_KW = {"galore": {"rank": 16}, "fira": {"rank": 16},
+            "apollo": {"rank": 16}}
+
+
+def _sched(lr, steps):
+    return linear_warmup_cosine(lr, steps)
+
+
+def table2(steps):
+    out = []
+    for name in ("sgd_colnorm", "sgd_rownorm", "sgd_signnorm", "sgd_nsnorm",
+                 "adam"):
+        out.append((f"table2/{name}",
+                    pretrain(make_optimizer(name, _sched(LRS[name], steps)),
+                             steps)))
+    return out
+
+
+def table3(steps):
+    rows = []
+    rows.append(("table3/colnorm+mmt-last(SCALE)",
+                 pretrain(make_optimizer("scale", _sched(1e-2, steps)), steps)))
+    rows.append(("table3/nsnorm+mmt-last",
+                 pretrain(make_scale(_sched(3e-3, steps), norm_rest="ns",
+                                     norm_last="ns"), steps)))
+    return rows
+
+
+def table5(steps):
+    rows = []
+    opts = [("scale", {}), ("adam", {}), ("stable_spam", {}), ("muon", {}),
+            ("sgd", {}), ("galore", {"rank": 16}), ("fira", {"rank": 16}),
+            ("apollo", {"rank": 16}), ("apollo_mini", {}), ("swan", {})]
+    for name, kw in opts:
+        rows.append((f"table5/{name}",
+                     pretrain(make_optimizer(name, _sched(LRS[name], steps),
+                                             **kw), steps)))
+    return rows
+
+
+def table8(steps):
+    return [
+        ("table8/mmt-none",
+         pretrain(make_scale(_sched(1e-2, steps), momentum_on=()), steps)),
+        ("table8/mmt-last(SCALE)",
+         pretrain(make_scale(_sched(1e-2, steps), momentum_on=("last",)), steps)),
+        ("table8/mmt-first+last",
+         pretrain(make_scale(_sched(1e-2, steps),
+                             momentum_on=("first", "last")), steps)),
+    ]
+
+
+def table13(steps):
+    s = _sched(1e-2, steps)
+    return [
+        ("table13/all-col(SCALE)", pretrain(make_scale(s), steps)),
+        ("table13/col-last,row-rest",
+         pretrain(make_scale(s, norm_last="col", norm_rest="row"), steps)),
+        ("table13/row-first,col-rest",
+         pretrain(make_scale(s, norm_first="row", norm_rest="col"), steps)),
+        ("table13/norm-larger-dim",
+         pretrain(make_scale(s, norm_last="larger", norm_rest="larger"), steps)),
+        ("table13/row-last,col-rest",
+         pretrain(make_scale(s, norm_last="row", norm_rest="col"), steps)),
+    ]
+
+
+def table11(steps):
+    """Overtraining regime (paper Table 11): 1x / 2x / 4x token budgets."""
+    rows = []
+    for mult in (1, 2, 4):
+        n = steps * mult
+        for name in ("scale", "adam"):
+            rows.append((f"table11/{name}/chinchilla_{mult}x",
+                         pretrain(make_optimizer(name, _sched(LRS[name], n)), n)))
+    return rows
+
+
+def proxy_rows(quick: bool = True):
+    steps = 60 if quick else 300
+    rows = []
+    tables = [table2, table3, table5, table8, table13] if not quick else \
+        [table2, table5]
+    for t in tables:
+        for name, ppl in t(steps):
+            rows.append((name, None, f"eval_ppl={ppl:.2f}"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Head-to-head registry sweep
+# --------------------------------------------------------------------------
+
+def _state_bytes(tx, params) -> int:
+    """Measured optimizer-state bytes via eval_shape (no allocation)."""
+    st = jax.eval_shape(tx.init, params)
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(st))
+
+
+def _hbm_passes(name: str, params) -> int:
+    """Analytic full-matrix HBM passes per step (fused_update convention:
+    fused stateless 4 / momentum 6; unfused 6 / 9 per non-vector matrix),
+    with 'fused' meaning the composition lowers to the Pallas kernels on
+    TPU. Adam-style state counts as a momentum row."""
+    labels = label_tree(params, LabelRules())
+    total = 0
+    for lab in jax.tree_util.tree_leaves(labels):
+        if lab == "vector":
+            continue
+        if name in ("scale", "scale_fused"):
+            stateful, fused = lab == "last", True
+        elif name in ("sgd_colnorm", "sgd_rownorm"):
+            stateful, fused = False, True
+        elif name in ("sgd", "sgd_signnorm", "sgd_nsnorm", "sgd_svdnorm"):
+            stateful, fused = False, False
+        elif name == "swan":
+            stateful, fused = lab in ("first", "last"), False
+        else:  # momentum or Adam state on every non-vector group
+            stateful, fused = True, False
+        total += (6 if stateful else 4) if fused else (9 if stateful else 6)
+    return total
+
+
+def head_to_head(steps: int = 60, seq: int = 64, batch: int = 16,
+                 time_iters: int = 3):
+    """One record per registry optimizer; see the module docstring."""
+    shapes_1b = param_shapes(get_arch("llama-1b"))
+    records = []
+    with fused_off_unless_tpu():
+        for name, spec in OPTIMIZER_REGISTRY.items():
+            kw = dict(PROXY_KW.get(name, {}))
+            tx = make_optimizer(name, _sched(LRS.get(name, 3e-3), steps),
+                                **kw)
+            state, step_fn, ds, loss = _train(tx, steps, seq=seq,
+                                              batch=batch)
+            ppl = _eval_ppl(state, ds)
+            us = time_call(step_fn, state, ds.host_batch_at(0),
+                           warmup=1, iters=time_iters)
+            method = ACCOUNTING.get(name, name)
+            records.append({
+                "optimizer": name,
+                "fused": spec.fused,
+                "final_loss": round(loss, 4),
+                "eval_ppl": round(ppl, 3),
+                "state_bytes": _state_bytes(tx, state.params),
+                "llama1b_gb": round(
+                    memory_report(shapes_1b, method).gb()[2], 3),
+                "step_time_us": round(us, 1),
+                "hbm_passes": _hbm_passes(name, state.params),
+            })
+    return records
+
+
+def head_to_head_rows(records):
+    return [(f"optimizers/{r['optimizer']}", r["step_time_us"],
+             f"loss={r['final_loss']} ppl={r['eval_ppl']} "
+             f"state={r['state_bytes']}B llama1b={r['llama1b_gb']}G "
+             f"hbm={r['hbm_passes']} fused={r['fused']}")
+            for r in records]
+
+
+def run(quick: bool = True):
+    """benchmarks.run section: the head-to-head sweep (quick = tiny)."""
+    steps, seq, batch = (10, 32, 8) if quick else (60, 64, 16)
+    return head_to_head_rows(head_to_head(steps, seq=seq, batch=batch))
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="10 steps, seq 32, batch 8 (CI bench-smoke)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_optimizers.json-style artifact here")
+    ap.add_argument("--table", default="",
+                    help="also run proxy tables: comma list of 2,3,5,8,11,13")
+    ap.add_argument("--memory", action="store_true",
+                    help="also emit the analytic Table-4 memory rows")
+    a = ap.parse_args(argv)
+
+    steps, seq, batch = (10, 32, 8) if a.tiny else (a.steps, 64, 16)
+    records = head_to_head(steps, seq=seq, batch=batch)
+    rows = head_to_head_rows(records)
+    if a.memory:
+        rows += memory_rows(quick=not a.tiny)
+    if a.table:
+        fns = {"2": table2, "3": table3, "5": table5, "8": table8,
+               "11": table11, "13": table13}
+        for t in a.table.split(","):
+            rows += [(n, None, f"eval_ppl={p:.2f}")
+                     for n, p in fns[t](steps)]
+    emit(rows)
+    if a.json:
+        doc = {"schema": "optimizer_bench/v1",
+               "config": {"steps": steps, "seq": seq, "batch": batch,
+                          "backend": jax.devices()[0].platform},
+               "rows": records}
+        with open(a.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {a.json}")
+
+
+if __name__ == "__main__":
+    main()

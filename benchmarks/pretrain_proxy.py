@@ -1,145 +1,37 @@
-"""CPU-scale pretraining proxies for the paper's perplexity tables.
+"""Back-compat shim: the pretraining proxies moved into
+``benchmarks/optimizer_bench.py`` (the merged head-to-head harness).
 
-Table 2 (normalization ablations), Table 3 (norm + last-layer momentum),
-Table 5 (main comparison), Table 8 (first+last momentum), Table 13 (mixed
-normalization schemes). A scaled-down LLaMA trains on the synthetic C4 proxy
-(Zipf marginal + learnable bigram) for a few hundred steps; we report eval
-perplexity. The claim validated is the *ordering* the paper reports, not the
-absolute C4 numbers (no C4 offline).
+Keeps the public surface (``pretrain``, ``proxy_cfg``, ``_sched``, ``LRS``,
+``table*``, ``run``) that ``examples/compare_optimizers.py`` and
+``benchmarks/variance_analysis.py`` import, and forwards the CLI — including
+the ``--tiny`` / ``--json`` bench-smoke flags — to the merged harness.
 """
 from __future__ import annotations
 
-import jax
-
-from repro.core import linear_warmup_cosine, make_optimizer
-from repro.core.scale import scale as make_scale
-from repro.data import make_dataset
-from repro.models import ModelConfig, init_params
-from repro.training import init_state, make_eval_step, make_train_step
-
-
-def proxy_cfg():
-    return ModelConfig(name="llama-proxy", family="dense", n_layers=4,
-                       d_model=128, n_heads=4, n_kv_heads=4, d_ff=344,
-                       vocab_size=512, dtype="float32", attn_kv_block=64,
-                       attn_q_block=64, loss_chunk=64)
-
-
-def pretrain(tx, steps: int, seed: int = 0, seq: int = 64, batch: int = 16):
-    cfg = proxy_cfg()
-    state = init_state(init_params(jax.random.PRNGKey(seed), cfg), tx)
-    step_fn = jax.jit(make_train_step(cfg, tx, clip_norm=1.0))
-    ds = make_dataset(cfg, seq_len=seq, global_batch=batch, seed=seed)
-    for i in range(steps):
-        state, _ = step_fn(state, ds.host_batch_at(i))
-    ev = jax.jit(make_eval_step(cfg))
-    ppl = 0.0
-    for j in range(4):
-        ppl += float(ev(state.params, ds.host_batch_at(100_000 + j))["perplexity"])
-    return ppl / 4
-
-
-# per-method peak lr, mirroring the paper's per-optimizer sweeps (App. C).
-# Normalized-SGD updates have per-column magnitude == lr, so their optimum
-# sits ~3x higher than Adam's on this proxy.
-LRS = {"sgd": 1e-1, "adam": 3e-3, "stable_spam": 3e-3, "muon": 3e-3,
-       "swan": 3e-3, "galore": 3e-3, "fira": 3e-3, "apollo": 3e-3,
-       "apollo_mini": 3e-3, "scale": 1e-2, "sgd_colnorm": 1e-2,
-       "sgd_rownorm": 1e-2, "sgd_signnorm": 3e-3, "sgd_nsnorm": 1e-2}
-
-
-def _sched(lr, steps):
-    return linear_warmup_cosine(lr, steps)
-
-
-def table2(steps):
-    out = []
-    for name in ("sgd_colnorm", "sgd_rownorm", "sgd_signnorm", "sgd_nsnorm",
-                 "adam"):
-        out.append((f"table2/{name}",
-                    pretrain(make_optimizer(name, _sched(LRS[name], steps)),
-                             steps)))
-    return out
-
-
-def table3(steps):
-    rows = []
-    rows.append(("table3/colnorm+mmt-last(SCALE)",
-                 pretrain(make_optimizer("scale", _sched(1e-2, steps)), steps)))
-    rows.append(("table3/nsnorm+mmt-last",
-                 pretrain(make_scale(_sched(3e-3, steps), norm_rest="ns",
-                                     norm_last="ns"), steps)))
-    return rows
-
-
-def table5(steps):
-    rows = []
-    opts = [("scale", {}), ("adam", {}), ("stable_spam", {}), ("muon", {}),
-            ("sgd", {}), ("galore", {"rank": 16}), ("fira", {"rank": 16}),
-            ("apollo", {"rank": 16}), ("apollo_mini", {}), ("swan", {})]
-    for name, kw in opts:
-        rows.append((f"table5/{name}",
-                     pretrain(make_optimizer(name, _sched(LRS[name], steps),
-                                             **kw), steps)))
-    return rows
-
-
-def table8(steps):
-    return [
-        ("table8/mmt-none",
-         pretrain(make_scale(_sched(1e-2, steps), momentum_on=()), steps)),
-        ("table8/mmt-last(SCALE)",
-         pretrain(make_scale(_sched(1e-2, steps), momentum_on=("last",)), steps)),
-        ("table8/mmt-first+last",
-         pretrain(make_scale(_sched(1e-2, steps),
-                             momentum_on=("first", "last")), steps)),
-    ]
-
-
-def table13(steps):
-    s = _sched(1e-2, steps)
-    return [
-        ("table13/all-col(SCALE)", pretrain(make_scale(s), steps)),
-        ("table13/col-last,row-rest",
-         pretrain(make_scale(s, norm_last="col", norm_rest="row"), steps)),
-        ("table13/row-first,col-rest",
-         pretrain(make_scale(s, norm_first="row", norm_rest="col"), steps)),
-        ("table13/norm-larger-dim",
-         pretrain(make_scale(s, norm_last="larger", norm_rest="larger"), steps)),
-        ("table13/row-last,col-rest",
-         pretrain(make_scale(s, norm_last="row", norm_rest="col"), steps)),
-    ]
-
-
-def table11(steps):
-    """Overtraining regime (paper Table 11): 1x / 2x / 4x token budgets."""
-    rows = []
-    for mult in (1, 2, 4):
-        n = steps * mult
-        for name in ("scale", "adam"):
-            rows.append((f"table11/{name}/chinchilla_{mult}x",
-                         pretrain(make_optimizer(name, _sched(LRS[name], n)), n)))
-    return rows
+from .optimizer_bench import (LRS, PROXY_KW, _sched, pretrain, proxy_cfg,
+                              proxy_rows, table2, table3, table5, table8,
+                              table11, table13)
 
 
 def run(quick: bool = True):
-    steps = 60 if quick else 300
-    rows = []
-    tables = [table2, table3, table5, table8, table13] if not quick else \
-        [table2, table5]
-    for t in tables:
-        for name, ppl in t(steps):
-            rows.append((name, None, f"eval_ppl={ppl:.2f}"))
-    return rows
+    return proxy_rows(quick=quick)
 
 
 if __name__ == "__main__":
-    import argparse
+    import sys
+
     from .common import emit
+    argv = sys.argv[1:]
+    if "--tiny" in argv or "--json" in argv:
+        # bench-smoke path: defer to the merged head-to-head harness
+        from .optimizer_bench import main
+        main(argv)
+        sys.exit(0)
+    import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all")
     ap.add_argument("--steps", type=int, default=300)
-    a = ap.parse_args()
+    a = ap.parse_args(argv)
     fns = {"2": table2, "3": table3, "5": table5, "8": table8, "11": table11,
            "13": table13}
     todo = fns.values() if a.table == "all" else [fns[a.table]]

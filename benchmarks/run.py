@@ -14,17 +14,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: norms,memory,pretrain,throughput,"
-                         "variance,roofline,fused,xent")
+                    help="comma list: norms,memory,pretrain,optimizers,"
+                         "throughput,variance,roofline,fused,xent")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (fused_update, memory_table, norm_timing, pretrain_proxy,
-                   roofline, throughput, variance_analysis, xent_fused)
+    from . import (fused_update, memory_table, norm_timing, optimizer_bench,
+                   pretrain_proxy, roofline, throughput, variance_analysis,
+                   xent_fused)
     sections = {
         "norms": norm_timing,
         "memory": memory_table,
         "pretrain": pretrain_proxy,
+        "optimizers": optimizer_bench,
         "throughput": throughput,
         "variance": variance_analysis,
         "roofline": roofline,

@@ -1,11 +1,14 @@
 """repro.core — the paper's contribution: SCALE + baseline optimizers."""
-from .api import OPTIMIZER_NAMES, make_optimizer
+from .api import (OPTIMIZER_NAMES, OPTIMIZER_REGISTRY, OptimizerSpec,
+                  make_optimizer)
 from .labels import LabelRules, label_tree, partition_sizes
-from .memory import MemoryReport, memory_report, optimizer_state_elements
+from .memory import (MemoryReport, memory_report,
+                     momentum_eligible_elements, optimizer_state_elements)
 from .normalization import (colnorm, normalize, NORMALIZATIONS,
                             ns_orthogonalize, resolve_larger, rownorm,
                             signnorm, svd_orthogonalize)
 from .optimizers import adam, muon, normalized_sgd, sgd, stable_spam_adam
+from .pipeline import PipeState, Project, Stages, build_pipeline
 from .compression import (compress, compressed, compression_ratio,
                           decompress)
 from .galore import apollo, apollo_mini, fira, galore
@@ -16,9 +19,11 @@ from .types import (GradientTransformation, apply_updates, chain,
                     global_norm, identity)
 
 __all__ = [
-    "OPTIMIZER_NAMES", "make_optimizer", "LabelRules", "label_tree",
+    "OPTIMIZER_NAMES", "OPTIMIZER_REGISTRY", "OptimizerSpec",
+    "PipeState", "Project", "Stages", "build_pipeline",
+    "make_optimizer", "LabelRules", "label_tree",
     "partition_sizes", "MemoryReport", "memory_report",
-    "optimizer_state_elements", "colnorm", "normalize", "NORMALIZATIONS",
+    "momentum_eligible_elements", "optimizer_state_elements", "colnorm", "normalize", "NORMALIZATIONS",
     "resolve_larger",
     "ns_orthogonalize", "rownorm", "signnorm", "svd_orthogonalize",
     "adam", "muon", "normalized_sgd", "sgd", "stable_spam_adam",

@@ -2,11 +2,22 @@
 
 Names match the paper's tables: scale, sgd, sgd_momentum, adam, adamw,
 stable_spam, muon, swan, galore, fira, apollo, apollo_mini, plus the Table-2
-normalization ablations sgd_colnorm / sgd_rownorm / sgd_signnorm / sgd_nsnorm.
+normalization ablations sgd_colnorm / sgd_rownorm / sgd_signnorm / sgd_nsnorm
+/ sgd_svdnorm.
+
+``OPTIMIZER_REGISTRY`` maps each name to an :class:`OptimizerSpec` — the
+factory callable, whether the composition can lower to the fused Pallas
+kernels (``impl="fused"`` → ``update_params`` in-place writes), and the
+default kwargs the name implies (e.g. ``adamw`` = adam + weight_decay).
+``make_optimizer`` validates both the name and the kwargs up front and
+raises a ``ValueError`` listing the valid choices, instead of the bare
+``TypeError`` a misspelled kwarg used to surface deep inside a factory.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+import inspect
+from typing import Any, Callable, Mapping
 
 from . import galore as _galore
 from . import optimizers as _opt
@@ -15,46 +26,70 @@ from . import swan as _swan
 from .types import GradientTransformation
 
 
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """One registry row: how to build an optimizer and what it supports.
+
+    ``fused`` means the composition contains stages that lower to the Pallas
+    colnorm/momentum kernels when built with ``impl="fused"`` (and therefore
+    gains the in-place ``update_params`` fast path on those leaves).
+    """
+    name: str
+    factory: Callable[..., GradientTransformation]
+    fused: bool = False
+    defaults: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def valid_kwargs(self) -> tuple:
+        params = inspect.signature(self.factory).parameters
+        return tuple(k for k in params if k != "lr")
+
+
+def _registry() -> dict:
+    specs = [
+        OptimizerSpec("scale", _scale.scale, fused=True),
+        OptimizerSpec("scale_fused", _scale.scale, fused=True,
+                      defaults={"impl": "fused"}),
+        OptimizerSpec("sgd", _opt.sgd),
+        OptimizerSpec("sgd_momentum", _opt.sgd, defaults={"momentum": 0.9}),
+        OptimizerSpec("adam", _opt.adam),
+        OptimizerSpec("adamw", _opt.adam, defaults={"weight_decay": 0.01}),
+        OptimizerSpec("stable_spam", _opt.stable_spam_adam),
+        OptimizerSpec("muon", _opt.muon),
+        OptimizerSpec("swan", _swan.swan),
+        OptimizerSpec("galore", _galore.galore),
+        OptimizerSpec("fira", _galore.fira),
+        OptimizerSpec("apollo", _galore.apollo),
+        OptimizerSpec("apollo_mini", _galore.apollo_mini),
+        OptimizerSpec("sgd_colnorm", _opt.normalized_sgd, fused=True,
+                      defaults={"kind": "col"}),
+        OptimizerSpec("sgd_rownorm", _opt.normalized_sgd, fused=True,
+                      defaults={"kind": "row"}),
+        OptimizerSpec("sgd_signnorm", _opt.normalized_sgd,
+                      defaults={"kind": "sign"}),
+        OptimizerSpec("sgd_nsnorm", _opt.normalized_sgd,
+                      defaults={"kind": "ns"}),
+        OptimizerSpec("sgd_svdnorm", _opt.normalized_sgd,
+                      defaults={"kind": "svd"}),
+    ]
+    return {s.name: s for s in specs}
+
+
+OPTIMIZER_REGISTRY = _registry()
+OPTIMIZER_NAMES = tuple(OPTIMIZER_REGISTRY)
+
+
 def make_optimizer(name: str, lr: Any = 1e-3, **kw) -> GradientTransformation:
-    name = name.lower()
-    if name == "scale":
-        return _scale.scale(lr, **kw)
-    if name == "scale_fused":
-        return _scale.scale(lr, impl="fused", **kw)
-    if name == "sgd":
-        return _opt.sgd(lr, **kw)
-    if name == "sgd_momentum":
-        kw.setdefault("momentum", 0.9)
-        return _opt.sgd(lr, **kw)
-    if name in ("adam",):
-        return _opt.adam(lr, **kw)
-    if name == "adamw":
-        kw.setdefault("weight_decay", 0.01)
-        return _opt.adam(lr, **kw)
-    if name == "stable_spam":
-        return _opt.stable_spam_adam(lr, **kw)
-    if name == "muon":
-        return _opt.muon(lr, **kw)
-    if name == "swan":
-        return _swan.swan(lr, **kw)
-    if name == "galore":
-        return _galore.galore(lr, **kw)
-    if name == "fira":
-        return _galore.fira(lr, **kw)
-    if name == "apollo":
-        return _galore.apollo(lr, **kw)
-    if name == "apollo_mini":
-        return _galore.apollo_mini(lr, **kw)
-    if name.startswith("sgd_") and name.endswith("norm"):
-        kind = {"sgd_colnorm": "col", "sgd_rownorm": "row",
-                "sgd_signnorm": "sign", "sgd_nsnorm": "ns",
-                "sgd_svdnorm": "svd"}[name]
-        return _opt.normalized_sgd(lr, kind=kind, **kw)
-    raise ValueError(f"unknown optimizer {name!r}")
-
-
-OPTIMIZER_NAMES = (
-    "scale", "scale_fused", "sgd", "sgd_momentum", "adam", "adamw",
-    "stable_spam", "muon", "swan", "galore", "fira", "apollo", "apollo_mini",
-    "sgd_colnorm", "sgd_rownorm", "sgd_signnorm", "sgd_nsnorm",
-)
+    key = name.lower()
+    spec = OPTIMIZER_REGISTRY.get(key)
+    if spec is None:
+        raise ValueError(
+            f"unknown optimizer {name!r}; valid choices: "
+            + ", ".join(sorted(OPTIMIZER_REGISTRY)))
+    valid = spec.valid_kwargs()
+    unknown = sorted(set(kw) - set(valid))
+    if unknown:
+        raise ValueError(
+            f"unknown kwarg(s) {unknown} for optimizer {name!r}; "
+            f"valid kwargs: {', '.join(valid)}")
+    merged = {**spec.defaults, **kw}
+    return spec.factory(lr, **merged)

@@ -10,69 +10,25 @@ These compress Adam's (m, v) states into a rank-``r`` subspace per matrix:
     used only to estimate channel-wise gradient scaling factors applied to the
     raw full-rank gradient. APOLLO-Mini is the rank-1 / tensor-wise variant.
 
-Per the paper (§4), all of these run full Adam on the first (embedding) and
-last (LM head) layers and on vector params — which dominates their memory at
-small model sizes. Memory accounting lives in :mod:`repro.core.memory`.
+The whole family is one pipeline composition: hidden matrices take the
+:class:`~repro.core.pipeline.Project` stage (projection + low-rank Adam +
+mode-specific back-projection, all owned by the pipeline engine — the
+projector tree lives in ``state.extra["proj"]``), while the first
+(embedding) and last (LM head) layers and vector params run full Adam —
+which dominates their memory at small model sizes (paper §4). Memory
+accounting lives in :mod:`repro.core.memory`.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
+from .labels import LabelRules
+from .pipeline import (ADAM_STAGE, PipeState, Project, Stages,
+                       _proj_left, _project, _project_back, _random_projector,
+                       _rank_for, _svd_projector, build_pipeline)
+from .types import GradientTransformation, Schedule
 
-from .labels import LabelRules, label_tree
-from .optimizers import _adam_leaf, _empty, _lr_at, _zeros
-from .types import GradientTransformation, PyTree, Schedule
-
-_f32 = jnp.float32
-
-
-def _proj_left(shape) -> bool:
-    """Project the smaller dimension (GaLore's rule): left iff d_in <= d_out."""
-    return shape[-2] <= shape[-1]
-
-
-def _rank_for(shape, rank: int) -> int:
-    return min(rank, shape[-2], shape[-1])
-
-
-def _svd_projector(g: jnp.ndarray, r: int) -> jnp.ndarray:
-    """Top-r left (or right) singular vectors of g, shape (..., min_dim, r).
-
-    Stacked (scan-over-layers / per-expert) leaves project per slice.
-    """
-    gf = g.astype(_f32)
-    if _proj_left(g.shape):
-        u, _, _ = jnp.linalg.svd(gf, full_matrices=False)
-        return u[..., :, :r]  # (..., m, r)
-    _, _, vt = jnp.linalg.svd(gf, full_matrices=False)
-    return jnp.swapaxes(vt[..., :r, :], -1, -2)  # (..., n, r)
-
-
-def _random_projector(key, shape, r: int) -> jnp.ndarray:
-    d = shape[-2] if _proj_left(shape) else shape[-1]
-    return jax.random.normal(key, tuple(shape[:-2]) + (d, r), _f32) / jnp.sqrt(r)
-
-
-def _project(g, p):
-    # left: R = P^T G  (..., r, n); right: R = G P  (..., m, r)
-    if _proj_left(g.shape):
-        return jnp.einsum("...dr,...dn->...rn", p, g)
-    return jnp.einsum("...mn,...nr->...mr", g, p)
-
-
-def _project_back(r_upd, p, shape):
-    if _proj_left(shape):
-        return jnp.einsum("...dr,...rn->...dn", p, r_upd)
-    return jnp.einsum("...mr,...nr->...mn", r_upd, p)
-
-
-class GaloreState(NamedTuple):
-    count: jnp.ndarray
-    proj: PyTree
-    mu: PyTree
-    nu: PyTree
+GaloreState = PipeState
 
 
 def _galore_family(
@@ -87,96 +43,13 @@ def _galore_family(
     eps: float,
     seed: int,
 ) -> GradientTransformation:
-    rules = rules or LabelRules()
-    random_proj = mode in ("apollo", "apollo_mini")
-    eff_rank = 1 if mode == "apollo_mini" else rank
-
-    def _is_lowrank(lab):
-        return lab == "matrix"  # first/last/vector use full Adam
-
-    def init(params):
-        labels = label_tree(params, rules)
-        base_key = jax.random.PRNGKey(seed)
-
-        def mk_proj(path_i, lab, p):
-            if not _is_lowrank(lab):
-                return _empty(p)
-            r = _rank_for(p.shape, eff_rank)
-            if random_proj:
-                return _random_projector(jax.random.fold_in(base_key, path_i), p.shape, r)
-            d = p.shape[-2] if _proj_left(p.shape) else p.shape[-1]
-            return jnp.zeros(tuple(p.shape[:-2]) + (d, r), _f32)
-
-        def mk_state(lab, p):
-            if not _is_lowrank(lab):
-                return _zeros(p)
-            r = _rank_for(p.shape, eff_rank)
-            rshape = (r, p.shape[-1]) if _proj_left(p.shape) else (p.shape[-2], r)
-            return jnp.zeros(tuple(p.shape[:-2]) + rshape, _f32)
-
-        leaves, treedef = jax.tree_util.tree_flatten(params)
-        lab_leaves = jax.tree_util.tree_leaves(labels)
-        proj = jax.tree_util.tree_unflatten(
-            treedef, [mk_proj(i, l, p) for i, (l, p) in enumerate(zip(lab_leaves, leaves))])
-        mu = jax.tree_util.tree_map(mk_state, labels, params)
-        nu = jax.tree_util.tree_map(mk_state, labels, params)
-        return GaloreState(jnp.zeros((), jnp.int32), proj, mu, nu)
-
-    def update(grads, state, params=None):
-        del params
-        labels = label_tree(grads, rules)
-        count = state.count
-        lr_t = _lr_at(lr, count)
-        refresh = (count % update_proj_gap) == 0
-        base_key = jax.random.fold_in(jax.random.PRNGKey(seed), count // update_proj_gap)
-
-        def leaf(path_i, lab, g, p, m, v):
-            gf = g.astype(_f32)
-            if not _is_lowrank(lab):
-                upd, m, v = _adam_leaf(gf, m, v, count, b1, b2, eps)
-                return -lr_t * upd, p, m, v
-            r = _rank_for(g.shape, eff_rank)
-            if random_proj:
-                new_p = _random_projector(jax.random.fold_in(base_key, path_i), g.shape, r)
-            else:
-                new_p = _svd_projector(gf, r)
-            p = jax.lax.cond(refresh, lambda: new_p, lambda: p)
-            R = _project(gf, p)
-            r_upd, m, v = _adam_leaf(R, m, v, count, b1, b2, eps)
-            if mode == "galore":
-                full = _project_back(r_upd, p, g.shape) * scale_factor
-            elif mode == "fira":
-                back = _project_back(r_upd, p, g.shape)
-                resid = gf - _project_back(R, p, g.shape)
-                phi = jnp.linalg.norm(r_upd) / (jnp.linalg.norm(R) + 1e-12)
-                full = (back + phi * resid) * scale_factor
-            else:  # apollo / apollo_mini: channel-wise gradient scaling
-                if mode == "apollo_mini":
-                    s = jnp.linalg.norm(r_upd) / (jnp.linalg.norm(R) + 1e-12)
-                    full = gf * s * jnp.sqrt(jnp.asarray(128.0, _f32))  # tensor-wise + heuristic sqrt(rank_ref) boost
-                else:
-                    # channel = output column when left-projected, row otherwise
-                    axis = -2 if _proj_left(g.shape) else -1
-                    num = jnp.linalg.norm(r_upd, axis=axis, keepdims=True)
-                    den = jnp.linalg.norm(R, axis=axis, keepdims=True) + 1e-12
-                    full = gf * (num / den)
-                full = full * scale_factor
-            return -lr_t * full, p, m, v
-
-        leaves, treedef = jax.tree_util.tree_flatten(grads)
-        lab_leaves = jax.tree_util.tree_leaves(labels)
-        p_leaves = jax.tree_util.tree_leaves(state.proj)
-        m_leaves = jax.tree_util.tree_leaves(state.mu)
-        v_leaves = jax.tree_util.tree_leaves(state.nu)
-        outs = [leaf(i, l, g, p, m, v) for i, (l, g, p, m, v) in
-                enumerate(zip(lab_leaves, leaves, p_leaves, m_leaves, v_leaves))]
-        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
-        proj = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
-        mu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
-        nu = jax.tree_util.tree_unflatten(treedef, [o[3] for o in outs])
-        return updates, GaloreState(count + 1, proj, mu, nu)
-
-    return GradientTransformation(init, update)
+    spec = Project(mode=mode, rank=rank, update_proj_gap=update_proj_gap,
+                   scale_factor=scale_factor, seed=seed)
+    # first/last/vector use full Adam (paper §4); only hidden matrices are
+    # low-rank
+    plans = {"first": ADAM_STAGE, "last": ADAM_STAGE,
+             "matrix": Stages(project=spec), "vector": ADAM_STAGE}
+    return build_pipeline(plans, lr, b1=b1, b2=b2, eps=eps, rules=rules)
 
 
 def galore(lr, rank: int = 256, update_proj_gap: int = 200, scale_factor: float = 0.25,

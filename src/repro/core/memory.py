@@ -2,7 +2,7 @@
 
 Computes weights + optimizer-state bytes analytically from parameter shapes,
 following the paper's estimation protocol: bf16 (2 bytes) per float, counting
-embedding/attention/MLP/head matrices. Used by ``benchmarks/memory_table.py``
+embedding/attention/MLP/head matrices. Used by ``benchmarks/optimizer_bench.py``
 and asserted against the paper's published numbers in ``tests/test_memory.py``.
 
 Tied embeddings: a ``tie_embeddings=True`` shapes tree (from
@@ -127,14 +127,62 @@ def optimizer_state_elements(
     return total
 
 
+def momentum_eligible_elements(
+    shapes: Mapping | Any,
+    method: str,
+    rules: LabelRules | None = None,
+) -> int:
+    """State elements that ``momentum_dtype="bfloat16"`` would store in bf16.
+
+    Mirrors the pipeline's cast-on-read/write rule: the *first* moment of
+    >=2-D params for methods whose factory exposes ``momentum_dtype``
+    (adam/adamw, muon, scale's LM-head momentum). Vector Adam moments and
+    every second moment stay f32 regardless, and methods without the knob
+    (sgd*, swan, stable_spam, the galore family) contribute zero.
+    """
+    rules = rules or LabelRules()
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=_is_shape)[0]
+    from .labels import path_str  # local import to avoid cycle
+
+    total = 0
+    for kp, leaf in leaves_with_path:
+        shape = _shape_of(leaf)
+        lab = rules.classify(path_str(kp), len(shape))
+        n = _size(shape)
+        if method in ("adam", "adamw") and lab != "vector":
+            total += n
+        elif method == "muon" and lab != "vector":
+            # paper counts muon's non-vector state as 1x = the first moment
+            total += n
+        elif method == "scale" and lab == "last":
+            total += n
+    return total
+
+
 def memory_report(
     shapes, method: str, dtype_bytes: int = 2, rank: int = 256,
-    rules: LabelRules | None = None,
+    rules: LabelRules | None = None, momentum_dtype: str | None = None,
 ) -> MemoryReport:
+    """Analytic weight/state bytes for ``method`` (paper Appendix B protocol).
+
+    ``momentum_dtype="bfloat16"`` bills the momentum-eligible first-moment
+    elements (see :func:`momentum_eligible_elements`) at 2 bytes instead of
+    ``dtype_bytes``. With the default ``dtype_bytes=2`` (the paper's bf16
+    protocol) that is a no-op; pass ``dtype_bytes=4`` for actual f32-state
+    footprints where the knob halves the eligible portion.
+    """
     leaves = jax.tree_util.tree_leaves(shapes, is_leaf=_is_shape)
     weight_elems = sum(_size(_shape_of(l)) for l in leaves)
     state_elems = optimizer_state_elements(shapes, method, rank=rank, rules=rules)
-    return MemoryReport(method, weight_elems * dtype_bytes, state_elems * dtype_bytes)
+    state_bytes = state_elems * dtype_bytes
+    if momentum_dtype == "bfloat16":
+        mu = momentum_eligible_elements(shapes, method, rules=rules)
+        state_bytes += mu * (2 - dtype_bytes)
+    elif momentum_dtype not in (None, "float32"):
+        raise ValueError(
+            f"momentum_dtype must be float32|bfloat16, got {momentum_dtype!r}")
+    return MemoryReport(method, weight_elems * dtype_bytes, state_bytes)
 
 
 METHODS = ("sgd", "sgd_momentum", "adam", "adamw", "stable_spam", "muon",

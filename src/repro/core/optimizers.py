@@ -1,56 +1,31 @@
 """Baseline optimizers (paper §4): SGD(±M), Adam(W), Stable-SPAM, Muon,
 and SGD with a chosen gradient normalization (Table 2 ablations).
 
-All optimizers are label-aware: per the paper (Appendix C) every
-memory-efficient method applies Adam to <=1-D "vector" parameters, whose
-size is negligible. State buffers that a method does not need are stored as
-zero-length arrays so the state pytree has uniform structure at ~zero cost.
+Every optimizer here is a thin stage composition over the shared leaf-update
+pipeline (:mod:`repro.core.pipeline`): per-label :class:`~repro.core
+.pipeline.Stages` plans are handed to ``build_pipeline``, which owns the
+init/update/update_params machinery, the kernel lowering, and the state
+treedef. Per the paper (Appendix C) every memory-efficient method applies
+Adam to <=1-D "vector" parameters, whose size is negligible. State buffers a
+composition does not need are zero-length placeholders so the state pytree
+has uniform structure at ~zero cost.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .labels import LabelRules, label_tree
-from .normalization import normalize, ns_orthogonalize
-from .types import GradientTransformation, PyTree, Schedule, global_norm
+from .labels import LabelRules
+from .pipeline import (ADAM_LR_STAGE, PipeState, Stages, _adam_leaf, _empty,
+                       _lr_at, _zeros, build_pipeline, muon_lr_scale)
+from .types import GradientTransformation, Schedule, global_norm
 
 _f32 = jnp.float32
 
-
-def _empty(p):
-    return jnp.zeros((0,), _f32)
-
-
-def _zeros(p):
-    return jnp.zeros(p.shape, _f32)
-
-
-def _lr_at(lr, count):
-    return lr(count) if callable(lr) else jnp.asarray(lr, _f32)
-
-
-def muon_lr_scale(shape) -> float:
-    """Muon's matched-lr scaling (Liu et al., 2025): 0.2 * sqrt(max dims)."""
-    return 0.2 * float(max(shape[-2], shape[-1])) ** 0.5
-
-
-def _adam_leaf(g, m, v, count, b1, b2, eps):
-    gf = g.astype(_f32)
-    m = b1 * m + (1.0 - b1) * gf
-    v = b2 * v + (1.0 - b2) * gf * gf
-    mhat = m / (1.0 - b1 ** (count + 1))
-    vhat = v / (1.0 - b2 ** (count + 1))
-    upd = mhat / (jnp.sqrt(vhat) + eps)
-    return upd, m, v
-
-
-class AdamState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree
-    nu: PyTree
+# Back-compat aliases: every pipeline optimizer shares one state treedef.
+AdamState = SgdState = NormSgdState = MuonState = PipeState
 
 
 def adam(
@@ -59,38 +34,18 @@ def adam(
     b2: float = 0.999,
     eps: float = 1e-8,
     weight_decay: float = 0.0,
+    momentum_dtype: str = "float32",
 ) -> GradientTransformation:
-    """Adam / AdamW (decoupled weight decay if ``weight_decay > 0``)."""
+    """Adam / AdamW (decoupled weight decay if ``weight_decay > 0``).
 
-    def init(params):
-        return AdamState(
-            count=jnp.zeros((), jnp.int32),
-            mu=jax.tree_util.tree_map(_zeros, params),
-            nu=jax.tree_util.tree_map(_zeros, params),
-        )
-
-    def update(grads, state, params=None):
-        count = state.count
-        lr_t = _lr_at(lr, count)
-
-        def leaf(g, m, v, p):
-            upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-            if weight_decay:
-                upd = upd + weight_decay * p.astype(_f32)
-            return -lr_t * upd, m, v
-
-        out = jax.tree_util.tree_map(leaf, grads, state.mu, state.nu, params)
-        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        mu = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        nu = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
-        return updates, AdamState(count + 1, mu, nu)
-
-    return GradientTransformation(init, update)
-
-
-class SgdState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree  # empty leaves when momentum == 0
+    ``momentum_dtype="bfloat16"`` stores the first moment of >=2-D params in
+    bf16 (cast-on-read/write; vector moments and the second moment stay f32).
+    """
+    st = Stages(adam=True, weight_decay=weight_decay)
+    return build_pipeline({lab: st for lab in ("first", "last", "matrix",
+                                               "vector")},
+                          lr, b1=b1, b2=b2, eps=eps,
+                          momentum_dtype=momentum_dtype)
 
 
 def sgd(
@@ -99,36 +54,9 @@ def sgd(
     nesterov: bool = False,
 ) -> GradientTransformation:
     """Vanilla SGD, optional heavy-ball momentum (paper eq. (2)/(7))."""
-
-    def init(params):
-        mk = _zeros if momentum else _empty
-        return SgdState(jnp.zeros((), jnp.int32), jax.tree_util.tree_map(mk, params))
-
-    def update(grads, state, params=None):
-        del params
-        lr_t = _lr_at(lr, state.count)
-
-        def leaf(g, m):
-            gf = g.astype(_f32)
-            if momentum:
-                m = momentum * m + (1.0 - momentum) * gf
-                d = momentum * m + (1.0 - momentum) * gf if nesterov else m
-            else:
-                d = gf
-            return -lr_t * d, m
-
-        out = jax.tree_util.tree_map(leaf, grads, state.mu)
-        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        mu = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        return updates, SgdState(state.count + 1, mu)
-
-    return GradientTransformation(init, update)
-
-
-class NormSgdState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree  # adam-m for vectors only
-    nu: PyTree  # adam-v for vectors only
+    st = Stages(momentum=momentum, nesterov=nesterov)
+    return build_pipeline({lab: st for lab in ("first", "last", "matrix",
+                                               "vector")}, lr)
 
 
 def normalized_sgd(
@@ -139,56 +67,24 @@ def normalized_sgd(
     b1: float = 0.9,
     b2: float = 0.999,
     eps: float = 1e-8,
+    impl: str = "jnp",
+    momentum_dtype: str = "float32",
 ) -> GradientTransformation:
     """SGD + gradient normalization on all matrix params (Table 2 rows).
 
     ``kind`` in {col,row,sign,ns,svd}. Vector params use Adam (Appendix C).
+    ``impl="fused"`` lowers the col/row kinds to the Pallas normalize /
+    norm_update kernels (sign/ns/svd stay on the jnp path).
+    ``momentum_dtype`` is accepted for zoo uniformity; with the standard
+    labels this optimizer carries no >=2-D first moment, so it is a no-op
+    beyond the vector Adam moments (which stay f32 regardless).
     """
-    rules = rules or LabelRules()
-    adam_lr = adam_lr if adam_lr is not None else lr
-
-    def init(params):
-        labels = label_tree(params, rules)
-
-        def mk(lab, p):
-            return _zeros(p) if lab == "vector" else _empty(p)
-
-        z = jax.tree_util.tree_map(mk, labels, params)
-        return NormSgdState(jnp.zeros((), jnp.int32), z,
-                            jax.tree_util.tree_map(lambda x: x, z))
-
-    def update(grads, state, params=None):
-        labels = label_tree(grads, rules)
-        count = state.count
-        lr_t = _lr_at(lr, count)
-        alr_t = _lr_at(adam_lr, count)
-
-        def leaf(lab, g, m, v):
-            if lab == "vector":
-                upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-                return -alr_t * upd, m, v
-            return -lr_t * normalize(g.astype(_f32), kind), m, v
-
-        out = jax.tree_util.tree_map(leaf, labels, grads, state.mu, state.nu)
-        istup = lambda x: isinstance(x, tuple)
-        return (
-            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
-            NormSgdState(
-                count + 1,
-                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
-                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
-            ),
-        )
-
-    return GradientTransformation(init, update)
-
-
-class StableSpamState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree
-    nu: PyTree
-    norm_ema: jnp.ndarray  # AdaGN: EMA of gradient global-norm
-    max_ema: PyTree        # AdaClip: EMA of per-tensor max |g|
+    norm_st = Stages(norm=kind)
+    plans = {"first": norm_st, "last": norm_st, "matrix": norm_st,
+             "vector": ADAM_LR_STAGE}
+    return build_pipeline(plans, lr, adam_lr, b1=b1, b2=b2, eps=eps,
+                          rules=rules, impl=impl,
+                          momentum_dtype=momentum_dtype)
 
 
 def stable_spam_adam(
@@ -205,75 +101,48 @@ def stable_spam_adam(
 
     Follows Huang et al. (2025): AdaClip clips per-element spikes above the
     EMA of the historical max |g|; AdaGN rescales the global norm toward its
-    EMA; momentum (m, v) is reset every ``reset_interval`` steps.
+    EMA; momentum (m, v) is reset every ``reset_interval`` steps. The
+    clipping runs as the pipeline's tree-level ``pre`` hook, the reset via
+    ``reset_interval``, and the update itself is the plain Adam stage.
     """
 
-    def init(params):
-        return StableSpamState(
-            count=jnp.zeros((), jnp.int32),
-            mu=jax.tree_util.tree_map(_zeros, params),
-            nu=jax.tree_util.tree_map(_zeros, params),
-            norm_ema=jnp.zeros((), _f32),
-            max_ema=jax.tree_util.tree_map(lambda p: jnp.zeros((), _f32), params),
-        )
+    def pre_init(params):
+        return {
+            "norm_ema": jnp.zeros((), _f32),
+            "max_ema": jax.tree_util.tree_map(
+                lambda p: jnp.zeros((), _f32), params),
+        }
 
-    def update(grads, state, params=None):
-        del params
-        count = state.count
-        lr_t = _lr_at(lr, count)
-
+    def pre(grads, extra, count):
         # --- AdaClip: per-tensor spike clipping against EMA of max|g|.
         def clip_leaf(g, mx):
             gf = g.astype(_f32)
             gmax = jnp.max(jnp.abs(gf))
             mx = theta * mx + (1 - theta) * gmax
             mx_hat = mx / (1.0 - theta ** (count + 1))
-            scale = jnp.where(jnp.abs(gf) > mx_hat, mx_hat / (jnp.abs(gf) + 1e-12), 1.0)
+            scale = jnp.where(jnp.abs(gf) > mx_hat,
+                              mx_hat / (jnp.abs(gf) + 1e-12), 1.0)
             return gf * scale, mx
 
-        out = jax.tree_util.tree_map(clip_leaf, grads, state.max_ema)
+        out = jax.tree_util.tree_map(clip_leaf, grads, extra["max_ema"])
         istup = lambda x: isinstance(x, tuple)
         grads_c = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup)
         max_ema = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup)
 
         # --- AdaGN: global-norm rescaling toward EMA.
         gnorm = global_norm(grads_c)
-        norm_ema = gamma1 * state.norm_ema + (1 - gamma1) * gnorm
+        norm_ema = gamma1 * extra["norm_ema"] + (1 - gamma1) * gnorm
         norm_hat = norm_ema / (1.0 - gamma1 ** (count + 1))
         gscale = jnp.where(gnorm > gamma2 * norm_hat + eps,
                            (gamma2 * norm_hat + eps) / (gnorm + 1e-12), 1.0)
         grads_c = jax.tree_util.tree_map(lambda g: g * gscale, grads_c)
+        return grads_c, {"norm_ema": norm_ema, "max_ema": max_ema}
 
-        # --- momentum reset
-        do_reset = (count % reset_interval) == 0
-        mu0 = jax.tree_util.tree_map(
-            lambda m: jnp.where(do_reset & (count > 0), jnp.zeros_like(m), m), state.mu)
-        nu0 = jax.tree_util.tree_map(
-            lambda v: jnp.where(do_reset & (count > 0), jnp.zeros_like(v), v), state.nu)
-
-        def leaf(g, m, v):
-            upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-            return -lr_t * upd, m, v
-
-        out = jax.tree_util.tree_map(leaf, grads_c, mu0, nu0)
-        return (
-            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
-            StableSpamState(
-                count + 1,
-                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
-                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
-                norm_ema,
-                max_ema,
-            ),
-        )
-
-    return GradientTransformation(init, update)
-
-
-class MuonState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree  # momentum for matrices; adam-m for first/last/vector
-    nu: PyTree  # adam-v for first/last/vector
+    st = Stages(adam=True)
+    return build_pipeline({lab: st for lab in ("first", "last", "matrix",
+                                               "vector")},
+                          lr, b1=b1, b2=b2, eps=eps, pre=pre,
+                          pre_init=pre_init, reset_interval=reset_interval)
 
 
 def muon(
@@ -287,48 +156,17 @@ def muon(
     eps: float = 1e-8,
     rules: Optional[LabelRules] = None,
     lr_scaling: bool = True,
+    momentum_dtype: str = "float32",
 ) -> GradientTransformation:
     """Muon (Jordan et al., 2024): momentum + Newton–Schulz orthogonalization
     for hidden matrices; Adam for embeddings, LM head, and vector params.
     Stores first-order momentum for every matrix (Table 4 memory row).
+    ``momentum_dtype="bfloat16"`` halves that momentum's storage (and the
+    first/last adam-m) with cast-on-read/write semantics.
     """
-    rules = rules or LabelRules()
-    adam_lr = adam_lr if adam_lr is not None else lr
-
-    def init(params):
-        labels = label_tree(params, rules)
-        mu = jax.tree_util.tree_map(lambda lab, p: _zeros(p), labels, params)
-        nu = jax.tree_util.tree_map(
-            lambda lab, p: _zeros(p) if lab != "matrix" else _empty(p),
-            labels, params)
-        return MuonState(jnp.zeros((), jnp.int32), mu, nu)
-
-    def update(grads, state, params=None):
-        labels = label_tree(grads, rules)
-        count = state.count
-        lr_t = _lr_at(lr, count)
-        alr_t = _lr_at(adam_lr, count)
-
-        def leaf(lab, g, m, v):
-            gf = g.astype(_f32)
-            if lab == "matrix":
-                m = beta * m + (1.0 - beta) * gf
-                d = beta * m + (1.0 - beta) * gf if nesterov else m
-                o = ns_orthogonalize(d, ns_steps)
-                s = muon_lr_scale(g.shape) if lr_scaling else 1.0
-                return -lr_t * s * o, m, v
-            upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-            return -alr_t * upd, m, v
-
-        out = jax.tree_util.tree_map(leaf, labels, grads, state.mu, state.nu)
-        istup = lambda x: isinstance(x, tuple)
-        return (
-            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
-            MuonState(
-                count + 1,
-                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
-                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
-            ),
-        )
-
-    return GradientTransformation(init, update)
+    matrix_st = Stages(momentum=beta, nesterov=nesterov, norm="ns",
+                       ns_steps=ns_steps, lr_scaling=lr_scaling)
+    plans = {"first": ADAM_LR_STAGE, "last": ADAM_LR_STAGE,
+             "matrix": matrix_st, "vector": ADAM_LR_STAGE}
+    return build_pipeline(plans, lr, adam_lr, b1=b1, b2=b2, eps=eps,
+                          rules=rules, momentum_dtype=momentum_dtype)

@@ -5,6 +5,13 @@ Per parameter group:
   * other matrices:         delta = -lr * colnorm(g)           (stateless)
   * vector params:          Adam (negligible memory; Appendix C)
 
+SCALE is expressed as a stage composition over the shared leaf-update
+pipeline (:mod:`repro.core.pipeline`): the momentum groups are
+``Stages(momentum=beta, norm=...)``, the other matrices ``Stages(norm=...)``
+and vectors the Adam stage. The pipeline owns the kernel lowering, the
+delta/write entry points, and the state treedef — this module only builds
+the per-label plans.
+
 Ablation knobs reproduce the paper's Tables 8 and 13:
   * ``momentum_on``: which groups carry momentum (default ("last",)).
   * ``norm_last`` / ``norm_rest``: normalization kind per group
@@ -33,20 +40,8 @@ each matrix exactly 3x: theta read, grad read, theta write); momentum
 matrices cost 6 instead of 9 (the exact accounting lives in
 :mod:`repro.kernels.dispatch`). The trainer feature-detects
 ``update_params`` and skips the separate ``apply_updates`` pass.
-
-``update_params`` takes two optional keyword extensions the trainer also
-feature-detects:
-
-  * ``shardings`` — a pytree of per-parameter ``NamedSharding`` (same
-    structure as params, derived from ``models/sharding.Rules``). Passed
-    through to the kernel dispatch, which shard_maps the fused step over
-    the mesh and psums the per-slice sums-of-squares over the mesh axes
-    sharding each matrix's reduce dim. Without it the fused kernels are
-    only correct on a single device / fully-replicated params.
-  * ``grad_scale`` — a scalar multiplied into every gradient at read time
-    (inside the kernels; as ``g * grad_scale`` on jnp branches, bitwise
-    identical to the trainer's old clip tree-map). This folds global-norm
-    clipping into the update and removes one full grad read+write.
+``update_params`` takes the ``shardings`` / ``grad_scale`` keyword
+extensions the trainer also feature-detects (see the pipeline module).
 
 State invariant: ``update`` returns a state with exactly the shapes/dtypes
 ``init`` produced (int32 count; f32 Adam moments; momentum in
@@ -70,35 +65,23 @@ remain exactly as before. Adam's vector moments stay f32 regardless
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
+from .labels import LabelRules
+from .pipeline import ADAM_LR_STAGE, PipeState, Stages, build_pipeline
+from .types import GradientTransformation, Schedule
 
-from .labels import LabelRules, label_tree, transposed_tree
-from .normalization import flip_kind, normalize, resolve_larger
-from .optimizers import _adam_leaf, _empty, _lr_at, _zeros, muon_lr_scale
-from .types import GradientTransformation, PyTree, Schedule
-
-_f32 = jnp.float32
+# SCALE's state is the shared pipeline state (count, mu, nu, extra=None).
+ScaleState = PipeState
 
 
-class ScaleState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree  # momentum for momentum_on groups; adam-m for vectors; else empty
-    nu: PyTree  # adam-v for vectors; else empty
-
-
-def _norm_kind_for(label: str, norm_last: str, norm_first: str, norm_rest: str) -> str:
+def _norm_kind_for(label: str, norm_last: str, norm_first: str,
+                   norm_rest: str) -> str:
     if label == "last":
         return norm_last
     if label == "first":
         return norm_first
     return norm_rest
-
-
-def _apply_norm(g: jnp.ndarray, kind: str) -> jnp.ndarray:
-    return normalize(g, resolve_larger(kind, g.shape))
 
 
 def scale(
@@ -134,162 +117,21 @@ def scale(
     the untied default rules is a hard error (``label_tree(require_last=
     True)``): the head would otherwise silently lose its momentum branch.
     """
-    rules = rules or LabelRules()
-    adam_lr = adam_lr if adam_lr is not None else lr
     norm_first = norm_first if norm_first is not None else norm_rest
     momentum_on = tuple(momentum_on)
-    try:
-        mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[momentum_dtype]
-    except KeyError:
-        raise ValueError(f"momentum_dtype must be float32|bfloat16, "
-                         f"got {momentum_dtype!r}") from None
 
-    fused = impl == "fused"
-    if fused:
-        from repro.kernels import dispatch as _kd
-    elif impl != "jnp":
-        raise ValueError(f"unknown impl {impl!r}")
+    def plan(lab):
+        # vectors route to Adam even when "vector" is listed in momentum_on
+        # (negligible memory; Appendix C) — init and update must agree or
+        # the state dtype fixed point breaks
+        if lab == "vector":
+            return ADAM_LR_STAGE
+        kind = _norm_kind_for(lab, norm_last, norm_first, norm_rest)
+        return Stages(momentum=beta if lab in momentum_on else 0.0,
+                      norm=kind, flip_transposed=True,
+                      lr_scaling=lr_scaling)
 
-    def _use_kernel(shape, kind, mode) -> bool:
-        return fused and _kd.supported(shape, kind, mode)
-
-    def init(params):
-        # require_last: a tree with an embedding but no 'last' matrix means
-        # a tied model was handed the untied rules — hard error, the head
-        # would silently train with no momentum (see labels.label_tree)
-        labels = label_tree(params, rules, require_last=True)
-
-        def mk_mu(lab, p):
-            # vector check first: update() routes vectors to Adam (f32
-            # moments) even when "vector" is listed in momentum_on, so
-            # init must agree or the state dtype fixed point breaks
-            if lab == "vector":
-                return _zeros(p)
-            if lab in momentum_on:  # SCALE momentum: momentum_dtype storage
-                return jnp.zeros(p.shape, mdt)
-            return _empty(p)
-
-        def mk_nu(lab, p):
-            return _zeros(p) if lab == "vector" else _empty(p)
-
-        return ScaleState(
-            count=jnp.zeros((), jnp.int32),
-            mu=jax.tree_util.tree_map(mk_mu, labels, params),
-            nu=jax.tree_util.tree_map(mk_nu, labels, params),
-        )
-
-    def _step(grads, state, params, shardings=None, grad_scale=None):
-        """Shared per-leaf routing for both entry points.
-
-        ``params is None`` -> delta mode: return the update tree (classic
-        ``update`` contract). Otherwise -> write mode: return new params
-        directly (``update_params``). Keeping one copy of the label/kind/
-        kernel branching is what guarantees the two modes cannot drift.
-
-        ``shardings``/``grad_scale`` (write mode): per-leaf NamedSharding
-        for the mesh-aware kernel dispatch, and the trainer's fused clip
-        factor. On jnp branches ``grad_scale`` is applied as ``g * scale``
-        before any cast — the same op the trainer's clip tree-map used, so
-        clip-then-update and fold-into-update are bitwise-equal there.
-
-        Updates/applies are rounded through the gradient dtype at the
-        source: a f32 update tree would materialize full-size f32 copies of
-        the biggest (stacked-layer) parameters (dry-run: +27 GB on
-        v3-671B). The jnp write-mode branches replay the delta mode's exact
-        cast chain (round to g.dtype, then to p.dtype on apply), so for
-        ``impl="jnp"`` both modes are bitwise-equal for any grad/param
-        dtype combination. The fused kernel write skips the intermediate
-        g.dtype rounding and applies in full f32 — slightly more precise,
-        within the parity-test tolerance.
-        """
-        labels = label_tree(grads, rules, require_last=True)
-        count = state.count
-        lr_t = _lr_at(lr, count)
-        alr_t = _lr_at(adam_lr, count)
-        # REPRO_FUSED is re-read on every (re)trace and keys the dispatch
-        # caches; an outer jit around the whole step still pins the mode at
-        # its own trace time (see the dispatch module docstring)
-        mode = _kd.resolve_mode() if fused else None
-
-        def emit(u, g, p):
-            # delta mode returns the rounded update; write mode applies it
-            u = u.astype(g.dtype)
-            return u if p is None else p + u.astype(p.dtype)
-
-        def leaf(lab, tr, g, m, v, p, sh):
-            # jnp-branch view of the gradient: scaled up front, exactly the
-            # op the trainer's clip tree-map used (XLA fuses it — free).
-            # Kernel branches instead thread grad_scale INTO the kernels,
-            # where it multiplies g at read time: scaling first would
-            # materialize a full g*scale copy (pallas_call is opaque to
-            # XLA fusion) — the HBM pass the fold exists to remove.
-            gsc = g if grad_scale is None else g * grad_scale
-            if lab == "vector":
-                upd, m, v = _adam_leaf(gsc, m, v, count, b1, b2, eps)
-                return emit(-alr_t * upd, gsc, p), m, v
-            s = muon_lr_scale(g.shape) if lr_scaling else 1.0
-            kind = _norm_kind_for(lab, norm_last, norm_first, norm_rest)
-            if tr:
-                # tied head stored (V, D): the paper's normalization along
-                # the output dimension is a row norm of the storage layout
-                kind = flip_kind(kind)
-            lr_eff = lr_t * s
-            if lab in momentum_on:
-                if _use_kernel(g.shape, kind, mode):
-                    gf = g.astype(_f32)
-                    if p is None:
-                        m, d = _kd.momentum_norm(
-                            m, gf, beta, kind, gscale=grad_scale,
-                            sharding=sh, mode=mode)
-                        return emit(-lr_eff * d, gsc, p), m, v
-                    p_new, m = _kd.momentum_norm_update(
-                        p, m, gf, beta, lr_eff, kind, gscale=grad_scale,
-                        sharding=sh, mode=mode)
-                    return p_new, m, v
-                gf = gsc.astype(_f32)
-                # cast-on-read/write: EMA and norm in f32, storage in mdt
-                m_f = beta * m.astype(_f32) + (1.0 - beta) * gf
-                return (emit(-lr_eff * _apply_norm(m_f, kind), gsc, p),
-                        m_f.astype(mdt), v)
-            if _use_kernel(g.shape, kind, mode):
-                gf = g.astype(_f32)
-                if p is None:
-                    return emit(-lr_eff * _kd.normalize(
-                        gf, kind, gscale=grad_scale, sharding=sh,
-                        mode=mode), gsc, p), m, v
-                return _kd.norm_update(p, gf, lr_eff, kind,
-                                       gscale=grad_scale, sharding=sh,
-                                       mode=mode), m, v
-            return emit(-lr_eff * _apply_norm(gsc.astype(_f32), kind),
-                        gsc, p), m, v
-
-        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
-        n = len(g_leaves)
-        flat = treedef.flatten_up_to
-        lab_l, mu_l, nu_l = flat(labels), flat(state.mu), flat(state.nu)
-        tr_l = flat(transposed_tree(grads, rules)) if rules.tied_last \
-            else [False] * n
-        p_l = flat(params) if params is not None else [None] * n
-        sh_l = flat(shardings) if shardings is not None else [None] * n
-        out = [leaf(*args) for args in zip(lab_l, tr_l, g_leaves, mu_l, nu_l,
-                                           p_l, sh_l)]
-        result = treedef.unflatten([o[0] for o in out])
-        mu = treedef.unflatten([o[1] for o in out])
-        nu = treedef.unflatten([o[2] for o in out])
-        return result, ScaleState(count + 1, mu, nu)
-
-    def update(grads, state, params=None):
-        del params  # classic contract: deltas are independent of theta
-        return _step(grads, state, None)
-
-    def update_params(grads, state, params, shardings=None, grad_scale=None):
-        """Fused step: write theta directly (no materialized update tree).
-
-        ``shardings``: optional pytree of per-param NamedSharding — makes
-        the fused kernels mesh-correct under pjit (see module docstring).
-        ``grad_scale``: optional scalar folded into the gradient read
-        (the trainer's global-norm clip factor).
-        """
-        return _step(grads, state, params, shardings, grad_scale)
-
-    return GradientTransformation(init, update, update_params)
+    plans = {lab: plan(lab) for lab in ("first", "last", "matrix", "vector")}
+    return build_pipeline(plans, lr, adam_lr, b1=b1, b2=b2, eps=eps,
+                          rules=rules, require_last=True, impl=impl,
+                          momentum_dtype=momentum_dtype)

@@ -2,34 +2,28 @@
 
 Hidden matrices: (1) GradNorm — row-wise standardization (zero mean / unit
 variance along the input dimension); (2) GradWhitening — (GG^T)^{-1/2} G,
-approximated with the same Newton–Schulz iteration Muon uses.
-First/last layers and vector params run full Adam (as in the original paper,
-which is why SWAN's memory saving shrinks for small models — paper §4).
+approximated with the same Newton–Schulz iteration Muon uses. As a pipeline
+composition that is ``Stages(standardize=True, norm="ns")`` on the matrix
+group. First/last layers and vector params run full Adam (as in the original
+paper, which is why SWAN's memory saving shrinks for small models — §4).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from .labels import LabelRules, label_tree
+from .labels import LabelRules
 from .normalization import ns_orthogonalize
-from .optimizers import _adam_leaf, _empty, _lr_at, _zeros
-from .types import GradientTransformation, PyTree, Schedule
+from .pipeline import ADAM_LR_STAGE, PipeState, Stages, build_pipeline
+from .types import GradientTransformation, Schedule
 
-_f32 = jnp.float32
-
-
-class SwanState(NamedTuple):
-    count: jnp.ndarray
-    mu: PyTree  # adam-m for first/last/vector only
-    nu: PyTree
+SwanState = PipeState
 
 
 def swan_normalize(g: jnp.ndarray, ns_steps: int = 5) -> jnp.ndarray:
     """GradNorm (row standardize) + GradWhitening (NS orthogonalization)."""
-    gf = g.astype(_f32)
+    gf = g.astype(jnp.float32)
     mean = jnp.mean(gf, axis=-1, keepdims=True)
     std = jnp.std(gf, axis=-1, keepdims=True)
     gn = (gf - mean) / (std + 1e-8)
@@ -45,38 +39,8 @@ def swan(
     eps: float = 1e-8,
     rules: Optional[LabelRules] = None,
 ) -> GradientTransformation:
-    rules = rules or LabelRules()
-    adam_lr = adam_lr if adam_lr is not None else lr
-
-    def init(params):
-        labels = label_tree(params, rules)
-        mk = lambda lab, p: _zeros(p) if lab != "matrix" else _empty(p)
-        mu = jax.tree_util.tree_map(mk, labels, params)
-        nu = jax.tree_util.tree_map(mk, labels, params)
-        return SwanState(jnp.zeros((), jnp.int32), mu, nu)
-
-    def update(grads, state, params=None):
-        del params
-        labels = label_tree(grads, rules)
-        count = state.count
-        lr_t = _lr_at(lr, count)
-        alr_t = _lr_at(adam_lr, count)
-
-        def leaf(lab, g, m, v):
-            if lab == "matrix":
-                return -lr_t * swan_normalize(g, ns_steps), m, v
-            upd, m, v = _adam_leaf(g, m, v, count, b1, b2, eps)
-            return -alr_t * upd, m, v
-
-        out = jax.tree_util.tree_map(leaf, labels, grads, state.mu, state.nu)
-        istup = lambda x: isinstance(x, tuple)
-        return (
-            jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup),
-            SwanState(
-                count + 1,
-                jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup),
-                jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup),
-            ),
-        )
-
-    return GradientTransformation(init, update)
+    matrix_st = Stages(standardize=True, norm="ns", ns_steps=ns_steps)
+    plans = {"first": ADAM_LR_STAGE, "last": ADAM_LR_STAGE,
+             "matrix": matrix_st, "vector": ADAM_LR_STAGE}
+    return build_pipeline(plans, lr, adam_lr, b1=b1, b2=b2, eps=eps,
+                          rules=rules)

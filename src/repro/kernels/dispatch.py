@@ -52,6 +52,30 @@ Coverage matrix (``supported`` / ``xent_supported``):
                       causal T < S.
   ==================  =====================================================
 
+Per-optimizer lowering (registry names, via ``core/pipeline.build_pipeline``
+with ``impl="fused"``): a pipeline stage composition lowers to these kernels
+iff it is a bare {col,row,larger}-norm, optionally with a plain momentum EMA
+(no nesterov, no projection, no standardize, no Adam on that leaf):
+
+  ==================  =====================================================
+  registry optimizer  fused lowering
+  ==================  =====================================================
+  scale, scale_fused  stateless matrices -> normalize / norm_update;
+                      momentum groups (LM head) -> momentum_norm /
+                      momentum_norm_update; Adam vectors stay jnp.
+  sgd_colnorm,        all matrix groups -> normalize / norm_update
+  sgd_rownorm         (build with ``impl="fused"``); Adam vectors jnp.
+  sgd_signnorm,       never fused (sign/ns/svd are outside the kernel
+  sgd_nsnorm,         coverage) — jnp path regardless of impl.
+  sgd_svdnorm
+  sgd(_momentum),     never fused: plain / nesterov SGD, Adam moments,
+  adam(w), muon,      NS orthogonalization, standardize, and low-rank
+  stable_spam, swan,  projection have no kernel compositions (muon's EMA
+  galore, fira,       is nesterov; swan standardizes first). They still
+  apollo(_mini)       provide ``update_params`` via the pipeline's jnp
+                      write path (bitwise-equal to update+apply).
+  ==================  =====================================================
+
 Sharded dispatch (pjit meshes)
 ------------------------------
 A bare ``pallas_call`` has no SPMD partitioning rule: under a ``("data",

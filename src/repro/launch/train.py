@@ -49,12 +49,12 @@ def build(args):
         # note only scale flips its col/row kind for the (V, D) storage —
         # the fixed-kind sgd_*norm ablations normalize along the storage
         # axis as defined.
+        from repro.core import OPTIMIZER_REGISTRY
         from repro.core.labels import LabelRules
-        try:
+        spec = OPTIMIZER_REGISTRY.get(args.optimizer.lower())
+        if spec is not None and "rules" in spec.valid_kwargs():
             return cfg, make_optimizer(args.optimizer, sched,
                                        rules=LabelRules.tied())
-        except TypeError:
-            pass  # factory has no rules kwarg
     tx = make_optimizer(args.optimizer, sched)
     return cfg, tx
 

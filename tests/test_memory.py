@@ -67,3 +67,30 @@ def test_arch_zoo_memory_reports():
         scale = memory_report(shapes, "scale").total_bytes
         sgd = memory_report(shapes, "sgd").total_bytes
         assert sgd <= scale < 0.45 * adam, arch  # scale uses <45% of adam
+
+
+def test_momentum_dtype_bf16_memory_accounting():
+    """memory_report(momentum_dtype=...): bf16 first moments halve the
+    eligible portion at f32 storage bytes, and are a no-op under the
+    paper's 2-byte protocol (the pinned Table-4 numbers cannot move)."""
+    from repro.core import memory_report, momentum_eligible_elements
+    from repro.models import param_shapes
+    from repro.configs import get_arch
+
+    shapes = param_shapes(get_arch("llama-60m"))
+    for method in ("adam", "muon", "scale"):
+        base = memory_report(shapes, method, dtype_bytes=4)
+        bf16 = memory_report(shapes, method, dtype_bytes=4,
+                             momentum_dtype="bfloat16")
+        mu = momentum_eligible_elements(shapes, method)
+        assert mu > 0
+        assert base.state_bytes - bf16.state_bytes == 2 * mu
+        # paper protocol (2 bytes/elem) is unchanged by the knob
+        assert memory_report(shapes, method,
+                             momentum_dtype="bfloat16").state_bytes == \
+            memory_report(shapes, method).state_bytes
+    # sgd has no momentum-eligible state
+    assert momentum_eligible_elements(shapes, "sgd") == 0
+    import pytest as _pytest
+    with _pytest.raises(ValueError, match="momentum_dtype"):
+        memory_report(shapes, "adam", momentum_dtype="fp8")

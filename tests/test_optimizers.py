@@ -311,3 +311,132 @@ def test_scale_bf16_momentum_fused_matches_jnp():
 def test_scale_momentum_dtype_rejects_unknown():
     with pytest.raises(ValueError, match="momentum_dtype"):
         make_optimizer("scale", 1e-2, momentum_dtype="float16")
+
+
+# ---------------------------------------------------------------------------
+# Registry + staged-pipeline zoo matrix
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_unknown_name():
+    with pytest.raises(ValueError, match="unknown optimizer 'adamm'"):
+        make_optimizer("adamm", 1e-3)
+    # the error enumerates the valid choices
+    with pytest.raises(ValueError, match="scale"):
+        make_optimizer("nope", 1e-3)
+
+
+def test_registry_rejects_unknown_kwarg():
+    with pytest.raises(ValueError, match=r"unknown kwarg.*'adam'"):
+        make_optimizer("adam", 1e-3, beta3=0.9)
+    with pytest.raises(ValueError, match="valid kwargs"):
+        make_optimizer("scale", 1e-3, momemtum_on=("last",))
+    # known kwargs still pass through
+    make_optimizer("adam", 1e-3, weight_decay=0.1)
+
+
+def test_registry_exposes_specs():
+    from repro.core import OPTIMIZER_REGISTRY
+    assert tuple(OPTIMIZER_REGISTRY) == OPTIMIZER_NAMES
+    fused = {n for n, s in OPTIMIZER_REGISTRY.items() if s.fused}
+    assert fused == {"scale", "scale_fused", "sgd_colnorm", "sgd_rownorm"}
+    assert "momentum" in OPTIMIZER_REGISTRY["sgd_momentum"].valid_kwargs()
+    assert OPTIMIZER_REGISTRY["adamw"].defaults == {"weight_decay": 0.01}
+
+
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("name", [n for n in OPTIMIZER_NAMES
+                                  if n != "scale_fused"])
+def test_zoo_update_params_matches_classic_path(name, gdtype):
+    """Every registry optimizer's write path is bitwise the classic path.
+
+    The pipeline's jnp write branch must replay the exact
+    update -> astype(g.dtype) -> p + u.astype(p.dtype) cast chain, so the
+    trainer auto-switching onto update_params cannot change a trajectory
+    for any zoo member (scale_fused is covered by the fused parity tests
+    at tolerance).
+    """
+    params = make_params()
+    kw = {"rank": 4} if name in ("galore", "fira", "apollo") else {}
+    tx = make_optimizer(name, 1e-2, **kw)
+    assert tx.update_params is not None
+    grads = jax.tree_util.tree_map(
+        lambda p: (0.1 * jnp.ones_like(p) + 0.01 * p).astype(
+            gdtype if p.ndim > 1 else p.dtype), params)
+    sa, sb = tx.init(params), tx.init(params)
+    pa = pb = params
+    # unjitted on purpose: op-by-op execution is the bitwise reference
+    # (under jit XLA may contract the -lr*d multiply and the p+u add into
+    # an fma, a 1-ulp difference that is fusion, not semantics)
+    for _ in range(3):
+        ua, sa = tx.update(grads, sa, pa)
+        pa = apply_updates(pa, ua)
+        pb, sb = tx.update_params(grads, sb, pb)
+    for x, y in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree_util.tree_leaves(sa),
+                    jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", ["sgd_colnorm", "sgd_rownorm"])
+def test_normalized_sgd_fused_impl_matches_reference(name):
+    """impl='fused' (interpret-mode kernels off-TPU) vs the jnp reference."""
+    params = make_params()
+    grads = make_grads(params)
+    tx_ref = make_optimizer(name, 1e-2)
+    tx_fus = make_optimizer(name, 1e-2, impl="fused")
+    sa, sb = tx_ref.init(params), tx_fus.init(params)
+    pa = pb = params
+    for _ in range(2):
+        ua, sa = tx_ref.update(grads, sa, pa)
+        pa = apply_updates(pa, ua)
+        pb, sb = tx_fus.update_params(grads, sb, pb)
+    for x, y in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["adam", "muon"])
+def test_momentum_dtype_bf16_extends_to_zoo(name):
+    """momentum_dtype='bfloat16' on adam/muon: >=2-D first moments stored
+    bf16, second moments + vector moments stay f32, state is an eval_shape
+    fixed point, and the trajectory tracks f32 within bf16 rounding."""
+    params = make_params()
+    grads = make_grads(params)
+    tx16 = make_optimizer(name, 1e-3, momentum_dtype="bfloat16")
+    tx32 = make_optimizer(name, 1e-3)
+    s16 = tx16.init(params)
+    assert s16.mu["lm_head"]["w"].dtype == jnp.bfloat16
+    assert s16.mu["layers"]["wq"].dtype == jnp.bfloat16
+    assert s16.mu["bias"]["b"].dtype == jnp.float32
+    for l in jax.tree_util.tree_leaves(s16.nu):
+        assert l.dtype == jnp.float32
+    a0 = jax.eval_shape(tx16.init, params)
+    a1 = jax.eval_shape(lambda g, s, p: tx16.update(g, s, p)[1],
+                        grads, a0, params)
+    for a, b in zip(jax.tree_util.tree_leaves(a0),
+                    jax.tree_util.tree_leaves(a1)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert a.weak_type == b.weak_type
+    s32 = tx32.init(params)
+    p16 = p32 = params
+    for _ in range(3):
+        u16, s16 = tx16.update(grads, s16, p16)
+        p16 = apply_updates(p16, u16)
+        u32, s32 = tx32.update(grads, s32, p32)
+        p32 = apply_updates(p32, u32)
+    for x, y in zip(jax.tree_util.tree_leaves(p16),
+                    jax.tree_util.tree_leaves(p32)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ["adam", "muon", "normalized_sgd"])
+def test_momentum_dtype_rejects_unknown_across_zoo(name):
+    from repro.core import adam, muon, normalized_sgd
+    fn = {"adam": adam, "muon": muon, "normalized_sgd": normalized_sgd}[name]
+    with pytest.raises(ValueError, match="momentum_dtype"):
+        fn(1e-3, momentum_dtype="fp8")

@@ -268,3 +268,93 @@ print("OK")
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
+
+
+FUSED_ZOO = [("scale_fused", "scale", {}),
+             ("sgd_colnorm", "sgd_colnorm", {"impl": "fused"}),
+             ("sgd_rownorm", "sgd_rownorm", {"impl": "fused"})]
+
+
+@pytest.mark.parametrize("name,ref_name,kw", FUSED_ZOO,
+                         ids=[n for n, _, _ in FUSED_ZOO])
+def test_sharded_fused_registry_zoo_matches_reference(name, ref_name, kw):
+    """Every fused-capable registry optimizer: sharded update_params with a
+    folded clip factor == clip-then-update on the unsharded jnp reference.
+    Generalizes the scale-only parity test to the whole fused zoo now that
+    the staged pipeline owns the kernel lowering."""
+    mesh = _mesh()
+    params = _census_params(jnp.float32)
+    grads = jax.tree_util.tree_map(
+        lambda p: 0.1 * jnp.ones_like(p) + 0.03 * p, params)
+    shardings = _census_shardings(params, mesh)
+    params_s = jax.device_put(params, shardings)
+    grads_s = jax.device_put(grads, shardings)
+    clip = jnp.asarray(0.7, jnp.float32)
+
+    ref = make_optimizer(ref_name, 1e-2)
+    fused = make_optimizer(name, 1e-2, **kw)
+    p_ref, s_ref = ref.update_params(
+        jax.tree_util.tree_map(lambda g: g * clip, grads),
+        ref.init(params), params)
+    p_sh, s_sh = fused.update_params(grads_s, fused.init(params_s), params_s,
+                                     shardings=shardings, grad_scale=clip)
+    for a, b in zip(jax.tree_util.tree_leaves(p_sh),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s_sh),
+                    jax.tree_util.tree_leaves(s_ref)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_fused_zoo_parity_under_forced_8_devices():
+    """Fused-capable registry optimizers end-to-end on a real 4x2 mesh:
+    sharded update_params == unsharded jnp reference, in a subprocess so
+    the 8 forced host devices don't depend on the parent's XLA_FLAGS."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import make_optimizer
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+ks = jax.random.split(jax.random.PRNGKey(5), 3)
+params = {"tok_embed": {"w": jax.random.normal(ks[0], (64, 32))},
+          "layers": {"wq": jax.random.normal(ks[1], (2, 32, 64))},
+          "lm_head": {"w": jax.random.normal(ks[2], (32, 64))},
+          "norm": {"s": jnp.ones((32,))}}
+grads = jax.tree_util.tree_map(lambda p: 0.1 * jnp.ones_like(p) + 0.03 * p,
+                               params)
+def sh(p):
+    if p.ndim == 2:
+        return NamedSharding(mesh, P("data", "model"))
+    if p.ndim == 3:
+        return NamedSharding(mesh, P(None, "data", "model"))
+    return NamedSharding(mesh, P())
+shardings = jax.tree_util.tree_map(sh, params)
+params_s = jax.device_put(params, shardings)
+grads_s = jax.device_put(grads, shardings)
+for name, ref_name, kw in [("scale_fused", "scale", {}),
+                           ("sgd_colnorm", "sgd_colnorm", {"impl": "fused"})]:
+    ref = make_optimizer(ref_name, 1e-2)
+    fused = make_optimizer(name, 1e-2, **kw)
+    p_ref, _ = ref.update_params(grads, ref.init(params), params)
+    p_sh, _ = fused.update_params(grads_s, fused.init(params_s), params_s,
+                                  shardings=shardings)
+    for a, b in zip(jax.tree_util.tree_leaves(p_sh),
+                    jax.tree_util.tree_leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+print("OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FUSED", None)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout
