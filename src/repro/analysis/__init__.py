@@ -1,0 +1,16 @@
+"""repro-lint: AST-based contract checks for kernels, dispatch, pipeline.
+
+Run ``python -m repro.analysis`` (see ``__main__.py`` for flags and
+``README.md`` for the rule catalogue). Passes:
+
+* ``registry_drift``   (RD00x) registry / docstring / Stages-plan drift
+* ``kernel_contract``  (KC00x) pallas_call grid/BlockSpec/alias/mask/f32
+* ``collective_axes``  (CX00x) shard_map specs + collective axis sourcing
+* ``jax_hygiene``      (JH00x) tracer branches, TypeError probes, env-in-jit
+"""
+from .findings import Finding, load_baseline, split_by_baseline, \
+    write_baseline
+from .lowering import apply_fix, render_lowering_table
+
+__all__ = ["Finding", "load_baseline", "split_by_baseline",
+           "write_baseline", "apply_fix", "render_lowering_table"]

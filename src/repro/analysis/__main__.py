@@ -1,0 +1,125 @@
+"""``python -m repro.analysis`` — run the repo's static-analysis passes.
+
+Exit codes: 0 clean (or all findings baselined), 2 new findings, 1 on
+internal errors. ``--json PATH`` additionally writes a machine-readable
+report (``-`` for stdout); CI uploads it as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import collective_axes, jax_hygiene, kernel_contract, registry_drift
+from .astutil import ModuleInfo, Resolver
+from .findings import load_baseline, split_by_baseline, write_baseline
+from .lowering import apply_fix
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+_DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def _collect_modules(paths):
+    modules = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            try:
+                modules.append(ModuleInfo(f))
+            except SyntaxError as e:
+                print(f"repro.analysis: cannot parse {f}: {e}",
+                      file=sys.stderr)
+        if not p.exists():
+            raise SystemExit(f"repro.analysis: no such path: {p}")
+    return modules
+
+
+def _rel(path):
+    try:
+        return Path(path).resolve().relative_to(_REPO_ROOT).as_posix()
+    except ValueError:
+        return Path(path).as_posix()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: kernel/dispatch/pipeline contract checks")
+    ap.add_argument("--paths", nargs="+", default=None, metavar="PATH",
+                    help="analyze these files/dirs instead of src/ "
+                         "(skips the live registry-drift pass)")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="write the JSON report here ('-' for stdout)")
+    ap.add_argument("--baseline", default=str(_DEFAULT_BASELINE),
+                    metavar="PATH", help="suppression baseline to apply")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings as the new baseline")
+    ap.add_argument("--fix", action="store_true",
+                    help="regenerate the dispatch lowering table from "
+                         "OPTIMIZER_REGISTRY, then re-check")
+    args = ap.parse_args(argv)
+
+    if args.fix:
+        changed = apply_fix()
+        print("lowering table: "
+              + ("rewritten" if changed else "already in sync"))
+
+    default_scan = args.paths is None
+    roots = ([_REPO_ROOT / "src" / "repro"] if default_scan
+             else [Path(p) for p in args.paths])
+    modules = _collect_modules(roots)
+    resolver = Resolver()
+    for mi in modules:
+        resolver.add(mi)
+
+    findings = []
+    findings += kernel_contract.run(modules, resolver, rel=_rel)
+    findings += collective_axes.run(modules, resolver, rel=_rel)
+    findings += jax_hygiene.run(modules, rel=_rel)
+    if default_scan:
+        # live-import passes only make sense against the real tree
+        findings += registry_drift.run()
+        findings += collective_axes.check_dispatch_contract()
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    new, suppressed = split_by_baseline(findings, baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"baseline: wrote {len(findings)} suppression(s) to "
+              f"{args.baseline}")
+        return 0
+
+    report = {
+        "schema": "repro.analysis/v1",
+        "root": str(_REPO_ROOT),
+        "counts": {"new": len(new), "suppressed": len(suppressed)},
+        "findings": [dict(f.to_dict(), suppressed=(f.key in baseline))
+                     for f in findings],
+    }
+    # with --json -, stdout is the machine-readable report; the text
+    # report moves to stderr so the JSON stays pipeable
+    json_on_stdout = args.json_out == "-"
+    if args.json_out:
+        payload = json.dumps(report, indent=2) + "\n"
+        if json_on_stdout:
+            sys.stdout.write(payload)
+        else:
+            Path(args.json_out).write_text(payload)
+
+    out = sys.stderr if json_on_stdout else sys.stdout
+    for f in new:
+        print(f.render(), file=out)
+    tail = (f"{len(new)} new finding(s), {len(suppressed)} baselined, "
+            f"{len(modules)} module(s) analyzed")
+    print(("FAIL: " if new else "OK: ") + tail, file=out)
+    return 2 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,264 @@
+"""Shared AST plumbing for the ``repro.analysis`` passes.
+
+The passes need to answer questions like "what tuple does the ``grid``
+kwarg resolve to?" or "does this contraction operand's value reach a
+``broadcasted_iota`` call?" across local assignments, if/else candidate
+branches, tuple unpacks, helper-function return values, and (for the
+kernel helpers shared between kernel packages) relative imports. This
+module provides a small best-effort resolver for that: every resolution
+returns a *list of candidates*, each paired with the scope context it
+was found in, and passes treat "unresolvable" as "skip / assume fine" —
+the analyzer prefers false negatives over noisy false positives.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Optional
+
+
+def dotted(node) -> Optional[str]:
+    """``'pl.pallas_call'`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node) -> Optional[str]:
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    return None
+
+
+def kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _collect_env(body, env):
+    """Record name -> [entry] bindings for a statement list.
+
+    Entries: ``("value", node)`` plain assignment, ``("unpack", node, i)``
+    tuple-unpack element i, ``("func", FunctionDef)`` nested def. Control
+    flow (if/for/while/with/try) is flattened — multiple bindings of one
+    name become multiple candidates. Nested function bodies are *not*
+    descended into (they are separate scopes resolved lazily).
+    """
+    for node in body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            env.setdefault(node.name, []).append(("func", node))
+            continue
+        if isinstance(node, ast.ClassDef):
+            continue
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    env.setdefault(tgt.id, []).append(("value", node.value))
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    for i, el in enumerate(tgt.elts):
+                        if isinstance(el, ast.Name):
+                            env.setdefault(el.id, []).append(
+                                ("unpack", node.value, i))
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name) and node.value is not None:
+                env.setdefault(node.target.id, []).append(
+                    ("value", node.value))
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(node, field, None)
+            if sub:
+                _collect_env(sub, env)
+        for handler in getattr(node, "handlers", ()) or ():
+            _collect_env(handler.body, env)
+
+
+class ModuleInfo:
+    """Parsed module plus its name-resolution indexes."""
+
+    def __init__(self, path, source: Optional[str] = None):
+        self.path = Path(path)
+        self.source = (source if source is not None
+                       else self.path.read_text())
+        self.tree = ast.parse(self.source)
+        self.parents = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.env = {}
+        _collect_env(self.tree.body, self.env)
+        # local name -> (module string, original name, relative level)
+        self.imports = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name] = (
+                        node.module, alias.name, node.level)
+
+    def enclosing_function(self, node):
+        while node is not None:
+            node = self.parents.get(node)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return node
+        return None
+
+
+class Resolver:
+    """Best-effort value resolution across one or more modules.
+
+    ``modules`` maps resolved file Paths to :class:`ModuleInfo`, enabling
+    cross-module lookups through relative ``from .. import`` statements
+    (e.g. ``scale_head`` importing ``_red_mask`` from ``colnorm``).
+    """
+
+    def __init__(self, modules: Optional[dict] = None):
+        self.modules = dict(modules or {})
+        self._func_envs = {}
+
+    def add(self, mi: ModuleInfo):
+        self.modules[mi.path.resolve()] = mi
+
+    # -- scope construction ------------------------------------------------
+
+    def func_env(self, fn) -> dict:
+        cached = self._func_envs.get(id(fn))
+        if cached is None:
+            cached = {}
+            args = fn.args
+            for a in (list(args.posonlyargs) + list(args.args)
+                      + list(args.kwonlyargs)):
+                cached.setdefault(a.arg, []).append(("param", a))
+            _collect_env(fn.body, cached)
+            self._func_envs[id(fn)] = cached
+        return cached
+
+    def ctx_for(self, node, mi: ModuleInfo):
+        """Scope chain (innermost first) for a node's lexical position."""
+        scopes = []
+        fn = mi.enclosing_function(node)
+        while fn is not None:
+            scopes.append(self.func_env(fn))
+            fn = mi.enclosing_function(fn)
+        scopes.append(mi.env)
+        return (tuple(scopes), mi)
+
+    def _import_target(self, mi: ModuleInfo, name: str):
+        """Resolve ``from X import name`` to (ModuleInfo, name) if parsed."""
+        imp = mi.imports.get(name)
+        if imp is None:
+            return None
+        module, orig, level = imp
+        if level:
+            base = mi.path.resolve().parents[level - 1]
+            cand = base.joinpath(*module.split("."))
+        else:
+            parts = module.split(".")
+            root = mi.path.resolve()
+            # walk up until the first path component of the module matches
+            cand = None
+            for up in root.parents:
+                if up.name == parts[0] and len(parts) > 1:
+                    cand = up.joinpath(*parts[1:])
+                    break
+            if cand is None:
+                return None
+        for p in (cand.with_suffix(".py"), cand / "__init__.py"):
+            other = self.modules.get(p.resolve())
+            if other is not None:
+                return other, orig
+        return None
+
+    # -- resolution --------------------------------------------------------
+
+    def resolve(self, node, ctx, depth: int = 6):
+        """Return candidate ``(node, ctx)`` values for an expression."""
+        if node is None or depth <= 0:
+            return [] if node is None else [(node, ctx)]
+        scopes, mi = ctx
+        if isinstance(node, ast.Name):
+            for env in scopes:
+                entries = env.get(node.id)
+                if not entries:
+                    continue
+                out = []
+                for entry in entries:
+                    kind = entry[0]
+                    if kind == "value":
+                        out.extend(self.resolve(entry[1], ctx, depth - 1))
+                    elif kind == "func":
+                        out.append((entry[1], ctx))
+                    elif kind == "param":
+                        out.append((node, ctx))
+                    elif kind == "unpack":
+                        hit = False
+                        for val, vctx in self.resolve(entry[1], ctx,
+                                                      depth - 1):
+                            if (isinstance(val, (ast.Tuple, ast.List))
+                                    and entry[2] < len(val.elts)):
+                                out.extend(self.resolve(
+                                    val.elts[entry[2]], vctx, depth - 1))
+                                hit = True
+                        if not hit:
+                            out.append((node, ctx))
+                return out or [(node, ctx)]
+            target = self._import_target(mi, node.id)
+            if target is not None:
+                other, orig = target
+                octx = ((other.env,), other)
+                if orig in other.env:
+                    return self.resolve(ast.Name(id=orig, ctx=ast.Load()),
+                                        octx, depth - 1)
+            return [(node, ctx)]
+        if isinstance(node, ast.IfExp):
+            return (self.resolve(node.body, ctx, depth - 1)
+                    + self.resolve(node.orelse, ctx, depth - 1))
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            out = []
+            for val, vctx in self.resolve(node.func, ctx, depth - 1):
+                if isinstance(val, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fenv = self.func_env(val)
+                    vscopes, vmi = vctx
+                    inner = ((fenv,) + tuple(vscopes), vmi)
+                    for stmt in ast.walk(val):
+                        if (isinstance(stmt, ast.Return)
+                                and stmt.value is not None):
+                            out.extend(self.resolve(stmt.value, inner,
+                                                    depth - 1))
+            return out or [(node, ctx)]
+        return [(node, ctx)]
+
+    def resolve_function(self, node, ctx, depth: int = 4):
+        """Candidate FunctionDef/Lambda values for a callable expression."""
+        out = []
+        for val, vctx in self.resolve(node, ctx, depth):
+            if isinstance(val, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                out.append((val, vctx))
+        return out
+
+    def tuple_lengths(self, node, ctx) -> set:
+        """Possible literal lengths of a tuple/list-valued expression."""
+        lens = set()
+        for val, _ in self.resolve(node, ctx):
+            if isinstance(val, (ast.Tuple, ast.List)):
+                lens.add(len(val.elts))
+        return lens
+
+
+def positional_arity(fn) -> int:
+    args = fn.args
+    return len(args.posonlyargs) + len(args.args)
+
+
+def iter_calls(tree, suffix: str):
+    """Yield Call nodes whose dotted callee name ends with ``suffix``."""
+    for node in ast.walk(tree):
+        name = call_name(node)
+        if name is not None and (name == suffix
+                                 or name.endswith("." + suffix)):
+            yield node

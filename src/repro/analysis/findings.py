@@ -1,0 +1,71 @@
+"""Finding records + suppression-baseline IO for ``repro.analysis``.
+
+A :class:`Finding` is one rule violation at one location. Baseline keys
+deliberately exclude line numbers — ``rule:path:message`` — so unrelated
+edits that shift code around do not invalidate suppressions, while any
+change to *what* is wrong (a different op name, a different kernel) does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``rule``     stable rule ID (e.g. ``KC003``) — see analysis/README.md.
+    ``path``     repo-relative posix path of the offending file.
+    ``line``     1-based line number (0 when the finding is not tied to a
+                 specific line, e.g. a registry-level drift).
+    ``message``  human-readable description; stable across line shifts.
+    """
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule}: {self.message}"
+
+
+def load_baseline(path: Path) -> set:
+    """Read a committed baseline; missing file == empty baseline."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    doc = json.loads(p.read_text())
+    return set(doc.get("suppressions", []))
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    keys = sorted({f.key for f in findings})
+    doc = {
+        "schema": "repro.analysis/baseline/v1",
+        "comment": ("Suppressed findings (rule:path:message). Regenerate "
+                    "with `python -m repro.analysis --write-baseline`; "
+                    "prefer fixing over suppressing."),
+        "suppressions": keys,
+    }
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+
+
+def split_by_baseline(findings, baseline):
+    """Partition findings into (new, suppressed) against a baseline set."""
+    new, suppressed = [], []
+    for f in findings:
+        (suppressed if f.key in baseline else new).append(f)
+    return new, suppressed

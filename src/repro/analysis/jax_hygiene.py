@@ -1,0 +1,136 @@
+"""JH: JAX tracing-hygiene checks.
+
+Rules
+-----
+JH001  Python-level branching on a traced value: an ``if``/``while`` test
+       built from jnp/lax array ops (comparisons through ``jnp.*`` calls,
+       ``.any()``/``.all()`` method results). Under jit these raise
+       ``TracerBoolConversionError`` — or worse, silently specialize when
+       the input happens to be concrete.
+JH002  ``except TypeError`` feature-probing. Calling an API and catching
+       ``TypeError`` to detect a missing kwarg also swallows genuine type
+       bugs (the class of bug PR 6 removed from ``launch/train.py``);
+       probe with ``inspect.signature`` instead.
+JH003  environment reads inside jitted code. ``os.environ`` /
+       ``os.getenv`` in a jit-decorated function runs once at trace time
+       and is frozen into the cache — the ``REPRO_FUSED`` re-read pitfall
+       PR 2 fixed. Resolve env config *outside* jit and pass it in as a
+       static argument.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import ModuleInfo, call_name, dotted
+from .findings import Finding
+
+# jnp calls that return Python scalars / static facts, fine in `if` tests
+_STATIC_OK = {"issubdtype", "isdtype", "result_type", "promote_types",
+              "can_cast", "finfo", "iinfo", "ndim", "shape", "size",
+              "dtype", "isinstance", "len",
+              # host-side facts, not traced arrays
+              "process_count", "process_index", "device_count",
+              "local_device_count", "devices", "local_devices",
+              "default_backend", "tree_leaves", "tree_structure",
+              "tree_all", "isscalar"}
+_TRACED_PREFIXES = ("jnp", "jax", "lax", "np.jnp")
+
+
+def run(modules, resolver=None, rel=None):
+    rel = rel or (lambda p: str(p))
+    out = []
+    for mi in modules:
+        path = rel(mi.path)
+        out.extend(_tracer_branches(mi, path))
+        out.extend(_typeerror_probes(mi, path))
+        out.extend(_env_reads_in_jit(mi, path))
+    return out
+
+
+def _is_traced_expr(node):
+    """Heuristic: does this test expression hold a traced jnp value?"""
+    for sub in ast.walk(node):
+        name = call_name(sub)
+        if not name:
+            continue
+        parts = name.split(".")
+        last = parts[-1]
+        if last in _STATIC_OK:
+            continue
+        if last in ("any", "all") and isinstance(sub.func, ast.Attribute):
+            # x.any() / x.all() on an array result
+            return True, f"{name}()"
+        if parts[0] in _TRACED_PREFIXES or (
+                len(parts) > 1 and parts[-2] in ("lax", "numpy")):
+            return True, f"{name}(...)"
+    return False, None
+
+
+def _tracer_branches(mi, path):
+    out = []
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        traced, what = _is_traced_expr(node.test)
+        if traced:
+            out.append(Finding(
+                "JH001", path, node.lineno,
+                f"Python-level branch on a traced value ({what}); use "
+                f"jnp.where / lax.cond or hoist the decision out of "
+                f"traced code"))
+    return out
+
+
+def _typeerror_probes(mi, path):
+    out = []
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.ExceptHandler) or node.type is None:
+            continue
+        names = []
+        if isinstance(node.type, ast.Tuple):
+            names = [dotted(e) for e in node.type.elts]
+        else:
+            names = [dotted(node.type)]
+        if any(n and n.split(".")[-1] == "TypeError" for n in names):
+            out.append(Finding(
+                "JH002", path, node.lineno,
+                "except TypeError feature-probe swallows genuine type "
+                "bugs; detect optional kwargs with inspect.signature "
+                "instead"))
+    return out
+
+
+def _is_jit_decorated(fn):
+    for dec in fn.decorator_list:
+        for sub in ast.walk(dec):
+            name = call_name(sub) or dotted(sub)
+            if name and name.split(".")[-1] in ("jit", "pjit"):
+                return True
+    return False
+
+
+def _env_reads_in_jit(mi, path):
+    out = []
+    for fn in ast.walk(mi.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _is_jit_decorated(fn):
+            continue
+        for node in ast.walk(fn):
+            name = call_name(node) or (
+                dotted(node) if isinstance(node, ast.Attribute) else None)
+            if name in ("os.getenv", "os.environ.get") or (
+                    name is not None and name.startswith("os.environ")):
+                out.append(Finding(
+                    "JH003", path, node.lineno,
+                    f"environment read ({name}) inside jit-decorated "
+                    f"{fn.name}; the value is frozen at trace time — "
+                    f"resolve it outside jit and pass it as a static "
+                    f"arg"))
+                break
+    return out
+
+
+def analyze_source(path, source):
+    """Convenience for tests: analyze one synthetic module."""
+    return run([ModuleInfo(path, source)])

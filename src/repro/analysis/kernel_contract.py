@@ -1,0 +1,322 @@
+"""KC: Pallas kernel contract checks (``pl.pallas_call`` sites).
+
+Rules
+-----
+KC001  grid arity vs BlockSpec ``index_map`` arity — a 3-D grid with a
+       2-arg index_map silently reads the wrong tiles.
+KC002  ``input_output_aliases`` consistency — alias indices must be in
+       range of the operand lists and the aliased input/output BlockSpecs
+       must describe the same tiling (donation writes through the input's
+       layout).
+KC003  tile-iota remainder masking — every contraction (``dot_general``,
+       ``@``, ``jnp.dot``, and ``+= jnp.sum(...)`` scratch accumulation)
+       must either take an operand whose value provably reaches a
+       ``broadcasted_iota`` remainder mask, or have its result flow into
+       a ``jnp.where`` whose predicate does. Unmasked remainder lanes are
+       undefined memory folded into the reduction.
+KC004  f32 statistics scratch — accumulator/statistics scratch declared
+       with an explicit low-precision dtype (bf16/f16/f8) loses the
+       paper's parity claims; sums and softmax stats stay in float32.
+
+All checks are best-effort AST resolution (see ``astutil``): anything
+unresolvable is skipped rather than reported.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import (ModuleInfo, Resolver, call_name, dotted, iter_calls,
+                      kwarg, positional_arity)
+from .findings import Finding
+
+_IOTA = ("broadcasted_iota", "iota")
+_LOW_PRECISION = ("bfloat16", "float16", "half", "float8_e4m3fn",
+                  "float8_e5m2", "float8_e4m3", "int8")
+
+
+def run(modules, resolver=None, rel=None):
+    resolver = resolver or Resolver()
+    for mi in modules:
+        resolver.add(mi)
+    rel = rel or (lambda p: str(p))
+    out = []
+    for mi in modules:
+        path = rel(mi.path)
+        for call in iter_calls(mi.tree, "pallas_call"):
+            ctx = resolver.ctx_for(call, mi)
+            out.extend(_check_site(call, ctx, resolver, mi, path))
+    return out
+
+
+# -- helpers ---------------------------------------------------------------
+
+def _kernel_target(call):
+    """(display name, expression) of the kernel function operand."""
+    if not call.args:
+        return "<kernel>", None
+    k = call.args[0]
+    if (isinstance(k, ast.Call) and (call_name(k) or "").endswith("partial")
+            and k.args):
+        k = k.args[0]
+    return dotted(k) or "<kernel>", k
+
+
+def _blockspecs(node, ctx, resolver, depth=3):
+    """Yield (BlockSpec Call, ctx, position) candidates from a specs expr."""
+    if node is None or depth <= 0:
+        return
+    for val, vctx in resolver.resolve(node, ctx):
+        if isinstance(val, (ast.Tuple, ast.List)):
+            for i, el in enumerate(val.elts):
+                for spec, sctx, _ in _blockspecs(el, vctx, resolver,
+                                                 depth - 1):
+                    yield spec, sctx, i
+        elif isinstance(val, ast.Call):
+            if (call_name(val) or "").endswith("BlockSpec"):
+                yield val, vctx, 0
+
+
+def _index_map(spec):
+    if len(spec.args) > 1:
+        return spec.args[1]
+    return kwarg(spec, "index_map")
+
+
+def _literal_elements(node, ctx, resolver):
+    """First literal tuple/list candidate of a specs expr, else None."""
+    if node is None:
+        return None
+    for val, vctx in resolver.resolve(node, ctx):
+        if isinstance(val, (ast.Tuple, ast.List)):
+            return val.elts, vctx
+    return None
+
+
+def _spec_shapes(node, ctx, resolver):
+    """Set of ast.dump()s of the BlockSpec tilings an expr resolves to."""
+    return {ast.dump(spec) for spec, _, _ in _blockspecs(node, ctx, resolver)}
+
+
+def _fn_reaches_iota(fn, mi, resolver, seen, depth=3):
+    if depth <= 0 or id(fn) in seen:
+        return False
+    seen.add(id(fn))
+    for node in ast.walk(fn):
+        name = call_name(node)
+        if name and name.split(".")[-1] in _IOTA:
+            return True
+    ctx = ((mi.env,), mi)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            for f, fctx in resolver.resolve_function(node.func, ctx, 3):
+                if isinstance(f, ast.Lambda):
+                    continue
+                if _fn_reaches_iota(f, fctx[1], resolver, seen, depth - 1):
+                    return True
+    return False
+
+
+def _reaches_iota(expr, ctx, resolver, depth=5, visited=None):
+    """Does this expression's value (transitively) involve an iota mask?"""
+    if expr is None or depth <= 0:
+        return False
+    visited = visited if visited is not None else set()
+    if id(expr) in visited:
+        return False
+    visited.add(id(expr))
+    for node in ast.walk(expr):
+        name = call_name(node)
+        if name and name.split(".")[-1] in _IOTA:
+            return True
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            for f, fctx in resolver.resolve_function(node.func, ctx, 3):
+                if isinstance(f, ast.Lambda):
+                    if _reaches_iota(f.body, fctx, resolver, depth - 1,
+                                     visited):
+                        return True
+                elif _fn_reaches_iota(f, fctx[1], resolver, set()):
+                    return True
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            for val, vctx in resolver.resolve(node, ctx, 4):
+                if val is node:
+                    continue
+                if _reaches_iota(val, vctx, resolver, depth - 1, visited):
+                    return True
+    return False
+
+
+def _contractions(fn):
+    """Yield (node, operand exprs) for contraction sites in a kernel."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            yield node, [node.left, node.right]
+            continue
+        name = call_name(node)
+        if name:
+            last = name.split(".")[-1]
+            if last in ("dot_general", "dot", "matmul") and len(node.args) >= 2:
+                yield node, list(node.args[:2])
+    for node in ast.walk(fn):
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add):
+            for sub in ast.walk(node.value):
+                nm = call_name(sub)
+                if nm and nm.split(".")[-1] == "sum" and sub.args:
+                    yield sub, [sub.args[0]]
+
+
+def _result_masked(node, fn, mi, resolver):
+    """Result-flow masking: the contraction's value lands in a Name that
+    is later consumed inside an iota-predicated ``jnp.where``."""
+    parent = mi.parents.get(node)
+    while parent is not None and isinstance(parent, (ast.BinOp, ast.Call)):
+        node, parent = parent, mi.parents.get(parent)
+    if not (isinstance(parent, ast.Assign) and len(parent.targets) == 1
+            and isinstance(parent.targets[0], ast.Name)):
+        return False
+    target = parent.targets[0].id
+    for call in iter_calls(fn, "where"):
+        if not call.args:
+            continue
+        used = any(isinstance(n, ast.Name) and n.id == target
+                   for a in call.args for n in ast.walk(a))
+        if used and _reaches_iota(call.args[0],
+                                  resolver.ctx_for(call, mi), resolver):
+            return True
+    return False
+
+
+def _dtype_bad(node, ctx, resolver):
+    for val, _ in resolver.resolve(node, ctx, 3):
+        name = dotted(val)
+        if name is None and isinstance(val, ast.Constant) \
+                and isinstance(val.value, str):
+            name = val.value
+        if name is None:
+            continue
+        last = name.split(".")[-1]
+        if last in _LOW_PRECISION:
+            return last
+    return None
+
+
+# -- per-site checks -------------------------------------------------------
+
+def _check_site(call, ctx, resolver, mi, path):
+    out = []
+    kname, kexpr = _kernel_target(call)
+
+    # KC001: grid arity vs index_map arity
+    grid_lens = set()
+    grid_node = kwarg(call, "grid")
+    if grid_node is not None:
+        for val, _ in resolver.resolve(grid_node, ctx):
+            if isinstance(val, (ast.Tuple, ast.List)):
+                grid_lens.add(len(val.elts))
+            elif isinstance(val, ast.Constant) and isinstance(val.value, int):
+                grid_lens.add(1)
+    in_specs = kwarg(call, "in_specs")
+    out_specs = kwarg(call, "out_specs")
+    if len(grid_lens) == 1:
+        grid_arity = next(iter(grid_lens))
+        for role, specs_node in (("in", in_specs), ("out", out_specs)):
+            for spec, sctx, pos in _blockspecs(specs_node, ctx, resolver):
+                imap = _index_map(spec)
+                if imap is None:
+                    continue
+                arities = {positional_arity(f) for f, _
+                           in resolver.resolve_function(imap, sctx)}
+                if arities and grid_arity not in arities:
+                    out.append(Finding(
+                        "KC001", path, spec.lineno,
+                        f"{kname}: {role}_specs[{pos}] index_map takes "
+                        f"{sorted(arities)} grid indices but the grid "
+                        f"has arity {grid_arity}"))
+
+    # KC002: input_output_aliases bounds + matching tilings
+    alias = kwarg(call, "input_output_aliases")
+    if isinstance(alias, ast.Dict):
+        ins = _literal_elements(in_specs, ctx, resolver)
+        outs = _literal_elements(out_specs, ctx, resolver)
+        n_in = len(ins[0]) if ins else None
+        n_out = len(outs[0]) if outs else (
+            1 if out_specs is not None and not isinstance(
+                out_specs, (ast.Tuple, ast.List)) else None)
+        for knode, vnode in zip(alias.keys, alias.values):
+            if not (isinstance(knode, ast.Constant)
+                    and isinstance(vnode, ast.Constant)):
+                continue
+            i, o = knode.value, vnode.value
+            if not isinstance(i, int) or not isinstance(o, int):
+                continue
+            if (n_in is not None and i >= n_in) or \
+                    (n_out is not None and o >= n_out):
+                out.append(Finding(
+                    "KC002", path, alias.lineno,
+                    f"{kname}: input_output_aliases {{{i}: {o}}} is out "
+                    f"of range for {n_in} inputs / {n_out} outputs"))
+                continue
+            in_el = ins[0][i] if ins else None
+            out_el = outs[0][o] if outs else out_specs
+            if in_el is None or out_el is None:
+                continue
+            a = _spec_shapes(in_el, ins[1] if ins else ctx, resolver)
+            b = _spec_shapes(out_el, outs[1] if outs else ctx, resolver)
+            if a and b and not (a & b):
+                out.append(Finding(
+                    "KC002", path, alias.lineno,
+                    f"{kname}: aliased operand {i} -> output {o} have "
+                    f"different BlockSpec tilings (donation writes "
+                    f"through the input layout)"))
+
+    # KC003: remainder masking on contractions in the kernel body
+    for fn, fctx in resolver.resolve_function(kexpr, ctx) if kexpr is not None \
+            else ():
+        if isinstance(fn, ast.Lambda):
+            continue
+        fmi = fctx[1]
+        seen_lines = set()
+        for node, operands in _contractions(fn):
+            line = getattr(node, "lineno", fn.lineno)
+            if line in seen_lines:
+                continue
+            # scope chain of the *contraction site* — kernels hide their
+            # compute in nested @pl.when functions with their own locals
+            site_ctx = resolver.ctx_for(node, fmi)
+            masked = any(_reaches_iota(op, site_ctx, resolver)
+                         for op in operands)
+            if not masked:
+                masked = _result_masked(node, fn, fmi, resolver)
+            if not masked:
+                seen_lines.add(line)
+                out.append(Finding(
+                    "KC003", path, line,
+                    f"{kname}: contraction in kernel body has no "
+                    f"tile-iota remainder mask on any operand and its "
+                    f"result never flows through a masked jnp.where"))
+
+    # KC004: low-precision statistics scratch
+    scratch = kwarg(call, "scratch_shapes")
+    if scratch is not None:
+        for node in ast.walk(scratch):
+            name = call_name(node)
+            if not name or name.split(".")[-1] not in ("VMEM", "SMEM"):
+                continue
+            if len(node.args) < 2:
+                continue
+            bad = _dtype_bad(node.args[1], ctx, resolver)
+            if bad:
+                out.append(Finding(
+                    "KC004", path, node.lineno,
+                    f"{kname}: scratch buffer declared {bad}; "
+                    f"accumulator/statistics scratch must be float32"))
+    return out
+
+
+def analyze_source(path, source, extra=None):
+    """Convenience for tests: analyze one synthetic module."""
+    modules = [ModuleInfo(path, source)]
+    for p, s in (extra or {}).items():
+        modules.append(ModuleInfo(p, s))
+    return run(modules)

@@ -1,0 +1,98 @@
+"""Generated per-optimizer lowering table for the dispatch docstring.
+
+``kernels/dispatch.py``'s module docstring carries a table describing how
+each registry optimizer lowers (or doesn't) onto the fused kernels. That
+table is *generated* from ``core.api.OPTIMIZER_REGISTRY`` — each
+:class:`OptimizerSpec` carries its ``lowering`` note — and lives between
+two marker lines::
+
+    .. lowering-table-begin
+    ...generated content...
+    .. lowering-table-end
+
+``python -m repro.analysis --fix`` rewrites the region in place; the
+registry-drift pass (RD001) fails when the on-disk region and the
+rendered registry disagree.
+"""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+BEGIN_MARK = ".. lowering-table-begin"
+END_MARK = ".. lowering-table-end"
+_NOTE = ("(generated from core.api.OPTIMIZER_REGISTRY — edit the specs'\n"
+         "``lowering`` text and run ``python -m repro.analysis --fix``)")
+
+
+def render_lowering_table(registry=None) -> str:
+    """Deterministic reST table, one row per registry optimizer."""
+    if registry is None:
+        from repro.core.api import OPTIMIZER_REGISTRY as registry
+    name_w = max([len("registry optimizer")] + [len(n) for n in registry])
+    fused_w = len("fused")
+    text_w = 79 - 2 - name_w - 2 - fused_w - 2
+    bar = f"  {'=' * name_w}  {'=' * fused_w}  {'=' * text_w}"
+    lines = [_NOTE, "", bar,
+             f"  {'registry optimizer':<{name_w}}  {'fused':<{fused_w}}"
+             f"  lowering",
+             bar]
+    for name, spec in registry.items():
+        fused = "yes" if spec.fused else "no"
+        body = textwrap.wrap(spec.lowering or "(no lowering note)",
+                             text_w) or [""]
+        lines.append(f"  {name:<{name_w}}  {fused:<{fused_w}}  {body[0]}")
+        for cont in body[1:]:
+            lines.append(f"  {'':<{name_w}}  {'':<{fused_w}}  {cont}")
+    lines.append(bar)
+    return "\n".join(line.rstrip() for line in lines)
+
+
+def extract_region(source: str):
+    """(region text, begin idx, end idx) between the markers, else None."""
+    lines = source.splitlines()
+    begin = end = None
+    for i, line in enumerate(lines):
+        if line.strip() == BEGIN_MARK and begin is None:
+            begin = i
+        elif line.strip() == END_MARK and begin is not None:
+            end = i
+            break
+    if begin is None or end is None:
+        return None
+    return "\n".join(lines[begin + 1:end]), begin, end
+
+
+def _normalize(text: str) -> str:
+    return "\n".join(line.rstrip() for line in text.strip("\n").splitlines())
+
+
+def region_matches(source: str, registry=None) -> bool:
+    region = extract_region(source)
+    if region is None:
+        return False
+    return _normalize(region[0]) == _normalize(
+        render_lowering_table(registry))
+
+
+def apply_fix(path=None, registry=None) -> bool:
+    """Rewrite the marker region in dispatch.py. True if the file changed."""
+    if path is None:
+        from repro.kernels import dispatch as _d
+        path = Path(_d.__file__)
+    path = Path(path)
+    source = path.read_text()
+    region = extract_region(source)
+    if region is None:
+        raise SystemExit(
+            f"{path}: missing {BEGIN_MARK!r} / {END_MARK!r} markers; "
+            f"cannot rewrite the lowering table")
+    _, begin, end = region
+    lines = source.splitlines()
+    new = (lines[:begin + 1] + render_lowering_table(registry).splitlines()
+           + lines[end:])
+    out = "\n".join(new) + ("\n" if source.endswith("\n") else "")
+    if out == source:
+        return False
+    path.write_text(out)
+    return True

@@ -1,0 +1,119 @@
+"""RD: registry / docstring / pipeline drift checks.
+
+Rules
+-----
+RD001  the dispatch docstring's per-optimizer lowering table differs from
+       the one rendered from ``OPTIMIZER_REGISTRY`` (or the marker region
+       is missing). Fix with ``python -m repro.analysis --fix``.
+RD002  a dispatch ``REGISTRY`` op has no row in the docstring coverage
+       matrix (the op is live but undocumented).
+RD003  an optimizer's ``fused`` flag contradicts the Stages compositions
+       it actually builds: the registry claims fused but no per-label
+       plan lowers (or vice versa). Uses the ``plans`` carried on the
+       built :class:`GradientTransformation` and mirrors the pipeline's
+       ``_use_kernel`` predicate.
+RD004  ``fused=True`` on a factory with no ``impl`` kwarg — the flag is
+       unreachable (``make_optimizer`` could never build the fused
+       variant).
+RD005  a ``kind`` default outside dispatch's ``FUSED_KINDS`` marked
+       fused, or a fused-coverable kind marked unfused.
+
+These checks run against the *live* modules (they import
+``repro.core.api`` and ``repro.kernels.dispatch``), with injection
+points for tests to mutate a registry row or the docstring source.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+from .lowering import region_matches
+
+_DISPATCH_REL = "src/repro/kernels/dispatch.py"
+_API_REL = "src/repro/core/api.py"
+
+
+def _lowerable(stages, fused_kinds) -> bool:
+    """Mirror of ``core.pipeline``'s `_use_kernel` static predicate."""
+    return (stages.norm in fused_kinds and not stages.adam
+            and stages.project is None and not stages.standardize
+            and not stages.nesterov)
+
+
+def run(registry=None, dispatch_source=None, build=True):
+    """Run all RD checks.
+
+    ``registry``: mapping name -> OptimizerSpec (default: the live
+    ``OPTIMIZER_REGISTRY``). ``dispatch_source``: override the dispatch
+    module source text (tests mutate the docstring). ``build``: also
+    build every optimizer and check RD003 (slower; pure-CPU tracing of
+    the factory closures only, no kernels run).
+    """
+    from repro.core.api import OPTIMIZER_REGISTRY
+    from repro.kernels import dispatch as _dispatch
+
+    registry = OPTIMIZER_REGISTRY if registry is None else registry
+    if dispatch_source is None:
+        dispatch_source = Path(_dispatch.__file__).read_text()
+    out = []
+
+    # RD001: generated lowering table in sync with the registry
+    if not region_matches(dispatch_source, registry):
+        out.append(Finding(
+            "RD001", _DISPATCH_REL, 0,
+            "dispatch docstring lowering table is out of sync with "
+            "OPTIMIZER_REGISTRY; run `python -m repro.analysis --fix`"))
+
+    # RD002: every dispatch op documented in the coverage-matrix docstring
+    doc = ast.get_docstring(ast.parse(dispatch_source)) or ""
+    for op in _dispatch.REGISTRY:
+        if f"``{op}" not in doc and op not in doc:
+            out.append(Finding(
+                "RD002", _DISPATCH_REL, 0,
+                f"dispatch op {op!r} has no row in the docstring "
+                f"coverage matrix"))
+
+    fused_kinds = tuple(_dispatch.FUSED_KINDS)
+
+    for name, spec in registry.items():
+        # RD004: fused flag must be reachable through the factory
+        if spec.fused and "impl" not in spec.valid_kwargs():
+            out.append(Finding(
+                "RD004", _API_REL, 0,
+                f"optimizer {name!r} is marked fused but its factory "
+                f"has no `impl` kwarg; the fused path is unreachable"))
+        # RD005: kind default vs dispatch coverage
+        kind = spec.defaults.get("kind")
+        if kind is not None and spec.fused != (kind in fused_kinds):
+            out.append(Finding(
+                "RD005", _API_REL, 0,
+                f"optimizer {name!r} has kind={kind!r} but "
+                f"fused={spec.fused}; dispatch FUSED_KINDS is "
+                f"{fused_kinds}"))
+        # RD003: fused flag vs the Stages plans that actually lower
+        if not build:
+            continue
+        try:
+            kw = dict(spec.defaults)
+            if spec.fused and "impl" in spec.valid_kwargs():
+                kw.setdefault("impl", "fused")
+            tx = spec.factory(1e-3, **kw)
+        except Exception as e:
+            out.append(Finding(
+                "RD003", _API_REL, 0,
+                f"optimizer {name!r} factory failed to build with its "
+                f"registry defaults: {e!r}"))
+            continue
+        plans = getattr(tx, "plans", None)
+        if plans is None:
+            continue  # non-pipeline transform; nothing to introspect
+        lowers = any(_lowerable(st, fused_kinds) for st in plans.values())
+        if lowers != spec.fused:
+            out.append(Finding(
+                "RD003", _API_REL, 0,
+                f"optimizer {name!r}: registry says fused={spec.fused} "
+                f"but its stage plans "
+                f"{'do' if lowers else 'do not'} lower to the fused "
+                f"kernels"))
+    return out

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 from repro.models import ModelConfig
 

@@ -33,11 +33,18 @@ class OptimizerSpec:
     ``fused`` means the composition contains stages that lower to the Pallas
     colnorm/momentum kernels when built with ``impl="fused"`` (and therefore
     gains the in-place ``update_params`` fast path on those leaves).
+
+    ``lowering`` is the human-readable lowering note rendered into the
+    dispatch docstring's per-optimizer table (``kernels/dispatch.py``).
+    That table is *generated* from this registry by
+    ``python -m repro.analysis --fix`` and verified against it by the
+    registry-drift analysis pass — edit the text here, not the docstring.
     """
     name: str
     factory: Callable[..., GradientTransformation]
     fused: bool = False
     defaults: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    lowering: str = ""
 
     def valid_kwargs(self) -> tuple:
         params = inspect.signature(self.factory).parameters
@@ -46,30 +53,65 @@ class OptimizerSpec:
 
 def _registry() -> dict:
     specs = [
-        OptimizerSpec("scale", _scale.scale, fused=True),
+        OptimizerSpec("scale", _scale.scale, fused=True, lowering=(
+            "stateless matrices -> normalize / norm_update; momentum "
+            "groups (LM head) -> momentum_norm / momentum_norm_update; "
+            "Adam vectors stay jnp")),
         OptimizerSpec("scale_fused", _scale.scale, fused=True,
-                      defaults={"impl": "fused"}),
-        OptimizerSpec("sgd", _opt.sgd),
-        OptimizerSpec("sgd_momentum", _opt.sgd, defaults={"momentum": 0.9}),
-        OptimizerSpec("adam", _opt.adam),
-        OptimizerSpec("adamw", _opt.adam, defaults={"weight_decay": 0.01}),
-        OptimizerSpec("stable_spam", _opt.stable_spam_adam),
-        OptimizerSpec("muon", _opt.muon),
-        OptimizerSpec("swan", _swan.swan),
-        OptimizerSpec("galore", _galore.galore),
-        OptimizerSpec("fira", _galore.fira),
-        OptimizerSpec("apollo", _galore.apollo),
-        OptimizerSpec("apollo_mini", _galore.apollo_mini),
+                      defaults={"impl": "fused"}, lowering=(
+                          'as scale, built with impl="fused" by default')),
+        OptimizerSpec("sgd", _opt.sgd, lowering=(
+            "never fused: plain SGD has no norm stage; jnp write path "
+            "only")),
+        OptimizerSpec("sgd_momentum", _opt.sgd, defaults={"momentum": 0.9},
+                      lowering=(
+                          "never fused: a bare momentum EMA without a "
+                          "col/row norm has no kernel composition")),
+        OptimizerSpec("adam", _opt.adam, lowering=(
+            "never fused: Adam moments have no kernel composition; jnp "
+            "write path only")),
+        OptimizerSpec("adamw", _opt.adam, defaults={"weight_decay": 0.01},
+                      lowering=(
+                          "as adam (decoupled weight decay folds into the "
+                          "Adam stage)")),
+        OptimizerSpec("stable_spam", _opt.stable_spam_adam, lowering=(
+            "never fused: AdaClip/AdaGN run as the tree-level pre hook; "
+            "the Adam stage stays jnp")),
+        OptimizerSpec("muon", _opt.muon, lowering=(
+            "never fused: nesterov EMA + Newton-Schulz orthogonalization "
+            "sit outside kernel coverage")),
+        OptimizerSpec("swan", _swan.swan, lowering=(
+            "never fused: standardize (GradNorm) precedes the norm "
+            "stage")),
+        OptimizerSpec("galore", _galore.galore, lowering=(
+            "never fused: the low-rank projection stage has no kernel "
+            "composition")),
+        OptimizerSpec("fira", _galore.fira, lowering=(
+            "as galore (adds the full-rank residual)")),
+        OptimizerSpec("apollo", _galore.apollo, lowering=(
+            "as galore (random projector, channel-wise scaling)")),
+        OptimizerSpec("apollo_mini", _galore.apollo_mini, lowering=(
+            "as apollo (rank-1 projector, tensor-wise scaling)")),
         OptimizerSpec("sgd_colnorm", _opt.normalized_sgd, fused=True,
-                      defaults={"kind": "col"}),
+                      defaults={"kind": "col"}, lowering=(
+                          "all matrix groups -> normalize / norm_update "
+                          'when built with impl="fused"; vectors stay '
+                          "jnp")),
         OptimizerSpec("sgd_rownorm", _opt.normalized_sgd, fused=True,
-                      defaults={"kind": "row"}),
+                      defaults={"kind": "row"}, lowering=(
+                          "as sgd_colnorm with the row kind")),
         OptimizerSpec("sgd_signnorm", _opt.normalized_sgd,
-                      defaults={"kind": "sign"}),
+                      defaults={"kind": "sign"}, lowering=(
+                          "never fused: sign norm is outside kernel "
+                          "coverage")),
         OptimizerSpec("sgd_nsnorm", _opt.normalized_sgd,
-                      defaults={"kind": "ns"}),
+                      defaults={"kind": "ns"}, lowering=(
+                          "never fused: Newton-Schulz norm is outside "
+                          "kernel coverage")),
         OptimizerSpec("sgd_svdnorm", _opt.normalized_sgd,
-                      defaults={"kind": "svd"}),
+                      defaults={"kind": "svd"}, lowering=(
+                          "never fused: SVD norm is outside kernel "
+                          "coverage")),
     ]
     return {s.name: s for s in specs}
 

@@ -23,9 +23,8 @@ from __future__ import annotations
 from typing import Optional
 
 from .labels import LabelRules
-from .pipeline import (ADAM_STAGE, PipeState, Project, Stages,
-                       _proj_left, _project, _project_back, _random_projector,
-                       _rank_for, _svd_projector, build_pipeline)
+from .pipeline import (ADAM_STAGE, PipeState, Project, Stages, _project,
+                       build_pipeline)
 from .types import GradientTransformation, Schedule
 
 GaloreState = PipeState

@@ -21,7 +21,7 @@ from typing import Any, Mapping
 import jax
 import numpy as np
 
-from .labels import LabelRules, label_tree
+from .labels import LabelRules
 
 GB = 1024 ** 3
 GB_DEC = 1e9  # the paper's "G" is decimal (0.131B params * 2B = 0.262G)

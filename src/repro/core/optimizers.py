@@ -18,8 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .labels import LabelRules
-from .pipeline import (ADAM_LR_STAGE, PipeState, Stages, _adam_leaf, _empty,
-                       _lr_at, _zeros, build_pipeline, muon_lr_scale)
+from .pipeline import ADAM_LR_STAGE, PipeState, Stages, build_pipeline
 from .types import GradientTransformation, Schedule, global_norm
 
 _f32 = jnp.float32

@@ -523,4 +523,5 @@ def build_pipeline(
         return _step(grads, state, params, write=True,
                      shardings=shardings, grad_scale=grad_scale)
 
-    return GradientTransformation(init, update, update_params)
+    return GradientTransformation(init, update, update_params,
+                                  plans=dict(plans))

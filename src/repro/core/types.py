@@ -50,6 +50,11 @@ class GradientTransformation(NamedTuple):
     # optional fused path: (grads, state, params) -> (new_params, new_state)
     update_params: Optional[
         Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]] = None
+    # static introspection: the per-label Stages plans a pipeline optimizer
+    # was built from (None for non-pipeline transforms). Consumed by
+    # repro.analysis's registry-drift pass to verify which compositions
+    # actually lower to the fused kernels; never touched at trace time.
+    plans: Optional[Any] = None
 
 
 class EmptyState(NamedTuple):

@@ -55,26 +55,49 @@ Coverage matrix (``supported`` / ``xent_supported``):
 Per-optimizer lowering (registry names, via ``core/pipeline.build_pipeline``
 with ``impl="fused"``): a pipeline stage composition lowers to these kernels
 iff it is a bare {col,row,larger}-norm, optionally with a plain momentum EMA
-(no nesterov, no projection, no standardize, no Adam on that leaf):
+(no nesterov, no projection, no standardize, no Adam on that leaf). All
+registry optimizers still provide ``update_params`` via the pipeline's jnp
+write path (bitwise-equal to update+apply) even when never fused.
 
-  ==================  =====================================================
-  registry optimizer  fused lowering
-  ==================  =====================================================
-  scale, scale_fused  stateless matrices -> normalize / norm_update;
-                      momentum groups (LM head) -> momentum_norm /
-                      momentum_norm_update; Adam vectors stay jnp.
-  sgd_colnorm,        all matrix groups -> normalize / norm_update
-  sgd_rownorm         (build with ``impl="fused"``); Adam vectors jnp.
-  sgd_signnorm,       never fused (sign/ns/svd are outside the kernel
-  sgd_nsnorm,         coverage) — jnp path regardless of impl.
-  sgd_svdnorm
-  sgd(_momentum),     never fused: plain / nesterov SGD, Adam moments,
-  adam(w), muon,      NS orthogonalization, standardize, and low-rank
-  stable_spam, swan,  projection have no kernel compositions (muon's EMA
-  galore, fira,       is nesterov; swan standardizes first). They still
-  apollo(_mini)       provide ``update_params`` via the pipeline's jnp
-                      write path (bitwise-equal to update+apply).
-  ==================  =====================================================
+.. lowering-table-begin
+(generated from core.api.OPTIMIZER_REGISTRY — edit the specs'
+``lowering`` text and run ``python -m repro.analysis --fix``)
+
+  ==================  =====  ==================================================
+  registry optimizer  fused  lowering
+  ==================  =====  ==================================================
+  scale               yes    stateless matrices -> normalize / norm_update;
+                             momentum groups (LM head) -> momentum_norm /
+                             momentum_norm_update; Adam vectors stay jnp
+  scale_fused         yes    as scale, built with impl="fused" by default
+  sgd                 no     never fused: plain SGD has no norm stage; jnp
+                             write path only
+  sgd_momentum        no     never fused: a bare momentum EMA without a col/row
+                             norm has no kernel composition
+  adam                no     never fused: Adam moments have no kernel
+                             composition; jnp write path only
+  adamw               no     as adam (decoupled weight decay folds into the
+                             Adam stage)
+  stable_spam         no     never fused: AdaClip/AdaGN run as the tree-level
+                             pre hook; the Adam stage stays jnp
+  muon                no     never fused: nesterov EMA + Newton-Schulz
+                             orthogonalization sit outside kernel coverage
+  swan                no     never fused: standardize (GradNorm) precedes the
+                             norm stage
+  galore              no     never fused: the low-rank projection stage has no
+                             kernel composition
+  fira                no     as galore (adds the full-rank residual)
+  apollo              no     as galore (random projector, channel-wise scaling)
+  apollo_mini         no     as apollo (rank-1 projector, tensor-wise scaling)
+  sgd_colnorm         yes    all matrix groups -> normalize / norm_update when
+                             built with impl="fused"; vectors stay jnp
+  sgd_rownorm         yes    as sgd_colnorm with the row kind
+  sgd_signnorm        no     never fused: sign norm is outside kernel coverage
+  sgd_nsnorm          no     never fused: Newton-Schulz norm is outside kernel
+                             coverage
+  sgd_svdnorm         no     never fused: SVD norm is outside kernel coverage
+  ==================  =====  ==================================================
+.. lowering-table-end
 
 Sharded dispatch (pjit meshes)
 ------------------------------

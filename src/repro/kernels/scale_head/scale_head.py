@@ -28,8 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..colnorm.colnorm import (DEFAULT_BLOCK, _blocks, _canon3, _red_mask,
-                               update_apply)
+from ..colnorm.colnorm import DEFAULT_BLOCK, _blocks, _red_mask, update_apply
 
 __all__ = ["DEFAULT_BLOCK", "momentum_sumsq", "head_update_apply"]
 

@@ -16,7 +16,6 @@ Usage:
       --out results/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -32,8 +31,8 @@ from repro.launch.mesh import HW, make_production_mesh
 from repro.models import (cache_logical_axes, count_params, init_cache,
                           init_params, param_logical_axes, param_shapes)
 from repro.models.sharding import Rules, tree_shardings
-from repro.training import (ServeState, init_state, make_decode_step,
-                            make_prefill_step, make_train_step)
+from repro.training import (ServeState, make_decode_step, make_prefill_step,
+                            make_train_step)
 from repro.training.trainer import TrainState
 
 

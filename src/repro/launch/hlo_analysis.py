@@ -16,7 +16,6 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
-import numpy as np
 
 from .mesh import HW
 

@@ -12,11 +12,9 @@ Example (end-to-end ~100M-param pretraining driver):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import restore_latest, save, save_async
 from repro.configs import get_arch
@@ -26,7 +24,6 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.models.sharding import Rules
 from repro.training import init_state, make_train_step
-from repro.training.trainer import TrainState
 
 
 def build(args):

@@ -11,7 +11,7 @@ architecture lowers through ``jax.lax.scan`` (compile-time O(1) in depth):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import functools
 import math
 import warnings
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,9 +16,8 @@ tied matrix ``last`` (``LabelRules.tied()``) so it keeps head momentum.
 """
 from __future__ import annotations
 
-import functools
 import warnings
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ Super-block kinds:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

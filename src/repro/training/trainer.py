@@ -4,7 +4,6 @@ function suitable for pjit sharding.
 """
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import Any, NamedTuple, Optional
 

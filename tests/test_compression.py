@@ -9,8 +9,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import colnorm, make_optimizer
-from repro.core.compression import (compress, compress_leaf, compressed,
-                                    compression_ratio, decompress)
+from repro.core.compression import (compress, compressed, compression_ratio,
+                                    decompress)
 
 
 def test_roundtrip_error_bounded():

@@ -1,5 +1,4 @@
 """Data pipeline: determinism, shard-awareness, marginals, learnability."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,13 +1,11 @@
 """Launch-layer units that don't need 512 devices: sharding rules, HLO cost
 parser, roofline math, input specs."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch import hlo_analysis as HA
 from repro.launch import hlo_cost as HC
-from repro.launch.mesh import HW
 from repro.models.sharding import Rules
 
 

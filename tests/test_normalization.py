@@ -7,8 +7,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (colnorm, ns_orthogonalize, rownorm, signnorm,
-                        svd_orthogonalize, normalize)
+from repro.core import colnorm, ns_orthogonalize, rownorm, signnorm, normalize
 
 DIMS = st.integers(2, 24)
 

@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (LabelRules, apply_updates, colnorm, label_tree,
-                        make_optimizer, OPTIMIZER_NAMES)
+from repro.core import (apply_updates, colnorm, label_tree, make_optimizer,
+                        OPTIMIZER_NAMES)
 from repro.core.labels import partition_sizes
 
 

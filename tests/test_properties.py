@@ -7,8 +7,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (apply_updates, colnorm, make_optimizer,
-                        memory_report, global_norm)
+from repro.core import apply_updates, make_optimizer, global_norm
 from repro.core.memory import optimizer_state_elements
 
 SMALL = st.integers(2, 12)
@@ -79,7 +78,7 @@ def test_momentum_ema_bounded(seed, steps):
 def test_loss_chunking_invariant(b, s, seed):
     """Chunked LM loss == unchunked softmax cross-entropy."""
     from conftest import tiny_cfg
-    from repro.models import init_params, forward, lm_loss, logits_from_hidden
+    from repro.models import init_params, forward, lm_loss
     import dataclasses
     cfg = tiny_cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -8,7 +8,6 @@ import pytest
 from conftest import tiny_cfg
 from repro.models import forward, init_params, logits_from_hidden
 from repro.training import greedy_generate, make_decode_step, make_prefill_step
-from repro.training.serving import ServeState
 
 CFGS = [
     tiny_cfg("dense"),

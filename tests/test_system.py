@@ -6,10 +6,8 @@
 3. Training is fault-tolerant: kill + auto-resume is bitwise identical.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from conftest import tiny_cfg
 from repro.core import make_optimizer, memory_report
 from repro.data import make_dataset
 from repro.models import init_params, param_shapes

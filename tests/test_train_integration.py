@@ -1,7 +1,6 @@
 """Integration: real training runs — convergence, resume-exactness,
 grad-accumulation equivalence, optimizer comparison at tiny scale."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
