@@ -1,4 +1,4 @@
-from .checkpointer import (AsyncSave, latest_step, restore, restore_latest,
-                           save, save_async)
-__all__ = ["AsyncSave", "latest_step", "restore", "restore_latest", "save",
-           "save_async"]
+from .checkpointer import (AsyncSave, CorruptCheckpointError, latest_step,
+                           restore, restore_latest, save, save_async)
+__all__ = ["AsyncSave", "CorruptCheckpointError", "latest_step", "restore",
+           "restore_latest", "save", "save_async"]

@@ -23,6 +23,28 @@ legacy readers.
 module is importable and fall back to uncompressed shards otherwise; a clear
 ImportError is raised only when zstd is explicitly requested (or needed to
 read an existing ``.zst`` shard).
+
+Resilience (PR 8):
+
+* per-host manifests additionally record **per-leaf checksums**
+  (``leaf_checksums``: crc32 of each array's raw bytes), verified on
+  ``restore`` — a flipped bit is named down to the leaf, not just the
+  shard;
+* any corruption-class failure (missing/unreadable shard, shard or leaf
+  checksum mismatch, truncated msgpack/zstd payload, malformed manifest)
+  raises :class:`CorruptCheckpointError`, and :func:`restore_latest`
+  **degrades** across it: the newest *verifiable* committed step wins,
+  with a warning naming what was skipped — an unreadable latest
+  checkpoint must cost one checkpoint interval, not the run;
+* save/commit IO runs under **bounded retry with backoff**
+  (``io_retries`` / ``io_backoff``) — transient filesystem errors are
+  absorbed, persistent ones still raise;
+* :class:`AsyncSave` re-raises worker-thread exceptions from ``wait()``
+  *and* ``done`` — a failed background checkpoint can no longer be
+  mistaken for a slow one;
+* the ``REPRO_FAULTS`` chaos hooks (:mod:`repro.training.faults`) can
+  inject IO errors and mid-commit kills at the exact points the atomicity
+  argument depends on (no-ops unless the env var is set).
 """
 from __future__ import annotations
 
@@ -32,6 +54,7 @@ import shutil
 import threading
 import time
 import uuid
+import warnings
 import zlib
 from typing import Any, Optional, Tuple
 
@@ -46,6 +69,44 @@ except ImportError:  # optional dep: only required for zstd compression
 
 PyTree = Any
 _SEP = "/"
+
+
+class CorruptCheckpointError(IOError):
+    """A committed checkpoint failed verification (checksum / truncation /
+    malformed manifest). ``restore_latest`` degrades across these to the
+    newest verifiable step; a direct ``restore`` propagates them."""
+
+
+def _fault_gate(kind: str, site: str) -> None:
+    """Chaos hook: inject an IO error or a simulated kill at ``site``.
+
+    A no-op unless ``REPRO_FAULTS`` is set (the env check keeps the
+    checkpoint module free of the training-package import on the normal
+    path; see :mod:`repro.training.faults` for the spec grammar).
+    """
+    if not os.environ.get("REPRO_FAULTS"):
+        return
+    from repro.training import faults
+    (faults.io_gate if kind == "io" else faults.kill_gate)(site)
+
+
+def _retry_io(fn, what: str, retries: int, backoff: float):
+    """Run ``fn`` with bounded retry-with-backoff on OSError.
+
+    Only OSError (the transient-filesystem class) is retried — a
+    simulated kill is a BaseException and anything else is a bug. The
+    final failure propagates with the attempt count in a warning trail.
+    """
+    for attempt in range(max(retries, 0) + 1):
+        try:
+            return fn()
+        except OSError as e:
+            if attempt >= retries:
+                raise
+            warnings.warn(
+                f"checkpoint {what} failed ({e}); retry "
+                f"{attempt + 1}/{retries} in {backoff * (2 ** attempt):.2f}s")
+            time.sleep(backoff * (2 ** attempt))
 
 
 def _require_zstd(why: str):
@@ -154,7 +215,9 @@ def _commit(directory: str, step: int, tmp_dir: str, step_dir: str,
                 and os.path.exists(os.path.join(step_dir, "COMMITTED")))
 
     try:
-        checksums, leaves, compression, n_hosts = {}, {}, "none", 1
+        _fault_gate("io", "commit")
+        checksums, leaves, leaf_sums, compression, n_hosts = \
+            {}, {}, {}, "none", 1
         for name in sorted(os.listdir(tmp_dir)):
             if not (name.startswith("manifest.") and name.endswith(".json")
                     and name != "manifest.json"):
@@ -164,6 +227,7 @@ def _commit(directory: str, step: int, tmp_dir: str, step_dir: str,
                 continue
             checksums.update(man.get("checksums", {}))
             leaves.update(man.get("leaves", {}))
+            leaf_sums.update(man.get("leaf_checksums", {}))
             compression = man.get("compression", compression)
             n_hosts = max(n_hosts, man.get("n_hosts", 1))
         # the merged manifest is written once per committer, from manifests
@@ -171,7 +235,12 @@ def _commit(directory: str, step: int, tmp_dir: str, step_dir: str,
         _write_json_atomic(os.path.join(tmp_dir, "manifest.json"),
                            {"step": step, "n_hosts": n_hosts,
                             "compression": compression,
-                            "checksums": checksums, "leaves": leaves})
+                            "checksums": checksums, "leaves": leaves,
+                            "leaf_checksums": leaf_sums})
+        # a kill here — every shard and manifest on disk, COMMITTED not
+        # yet written — must leave an uncommitted .tmp dir that
+        # restore_latest skips and a later save completes or replaces
+        _fault_gate("kill", "commit")
         with open(os.path.join(tmp_dir, "COMMITTED"), "w") as f:
             f.write("ok")
     except OSError:
@@ -205,7 +274,8 @@ def _commit(directory: str, step: int, tmp_dir: str, step_dir: str,
 
 def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
          n_hosts: int = 1, keep: int = 3, compression: str = "auto",
-         barrier_timeout: float = 0.0) -> str:
+         barrier_timeout: float = 0.0, io_retries: int = 3,
+         io_backoff: float = 0.05) -> str:
     """Atomically save ``tree`` for ``step``. Returns the checkpoint path.
 
     ``compression``: "auto" (zstd when available, else uncompressed),
@@ -220,6 +290,11 @@ def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
     immediately (path not yet committed — the last host to arrive commits
     for everyone, which is the fast path for sequential test saves and
     for launchers that already sequence their hosts).
+
+    Shard/manifest writes and the commit run under bounded
+    retry-with-backoff (``io_retries`` attempts beyond the first,
+    ``io_backoff`` seconds doubling per attempt): transient IO errors are
+    absorbed, persistent ones raise after the last attempt.
     """
     if compression not in ("auto", "zstd", "none"):
         raise ValueError(f"compression must be auto|zstd|none, got {compression!r}")
@@ -247,19 +322,34 @@ def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
     else:
         comp = payload
         shard = os.path.join(tmp_dir, f"shard_{host_id:05d}.mpk")
-    with open(shard + ".part", "wb") as f:
-        f.write(comp)
-    os.replace(shard + ".part", shard)
+
+    def write_shard():
+        _fault_gate("io", "save")
+        with open(shard + ".part", "wb") as f:
+            f.write(comp)
+        os.replace(shard + ".part", shard)
+
+    _retry_io(write_shard, f"shard write ({os.path.basename(shard)})",
+              io_retries, io_backoff)
+    # a kill here (shard on disk, manifest not) leaves an unvouched shard
+    # that the next save overwrites — never a committed step
+    _fault_gate("kill", "save")
 
     # this host's manifest: never touched by any other host (atomic rename
-    # makes readers see either nothing or a complete document)
-    _write_json_atomic(
-        os.path.join(tmp_dir, _manifest_name(host_id)),
-        {"step": step, "host": host_id, "n_hosts": n_hosts,
-         "compression": "zstd" if use_zstd else "none",
-         "checksums": {os.path.basename(shard): zlib.crc32(comp)},
-         "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
-                    for k, v in flat.items()}})
+    # makes readers see either nothing or a complete document). Per-leaf
+    # crc32s let restore name a corrupted leaf, not just a corrupted shard.
+    manifest = {
+        "step": step, "host": host_id, "n_hosts": n_hosts,
+        "compression": "zstd" if use_zstd else "none",
+        "checksums": {os.path.basename(shard): zlib.crc32(comp)},
+        "leaf_checksums": {k: zlib.crc32(v.tobytes())
+                           for k, v in flat.items()},
+        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                   for k, v in flat.items()}}
+    _retry_io(
+        lambda: _write_json_atomic(
+            os.path.join(tmp_dir, _manifest_name(host_id)), manifest),
+        "manifest write", io_retries, io_backoff)
     if os.path.exists(step_dir):
         _adopt_committed(step_dir, tmp_dir, host_id, n_hosts)
 
@@ -271,7 +361,9 @@ def save(directory: str, step: int, tree: PyTree, host_id: int = 0,
             os.path.exists(os.path.join(tmp_dir, _manifest_name(h)))
             for h in range(n_hosts))
         if present:
-            _commit(directory, step, tmp_dir, step_dir, keep)
+            _retry_io(
+                lambda: _commit(directory, step, tmp_dir, step_dir, keep),
+                "commit", io_retries, io_backoff)
             break
         if os.path.exists(os.path.join(step_dir, "COMMITTED")):
             break  # another host committed while we polled
@@ -304,6 +396,69 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _read_verified(step_dir: str, host_id: int) -> dict:
+    """Read + verify this host's shard -> {leaf key: np.ndarray}.
+
+    Every corruption-class failure — missing/malformed manifest, missing
+    shard, shard or per-leaf checksum mismatch, truncated payload — raises
+    :class:`CorruptCheckpointError` (an IOError), so ``restore_latest``
+    can degrade across it uniformly. A missing zstandard module stays an
+    ImportError: that is an environment problem, not a bad checkpoint.
+    """
+    # per-host manifests are authoritative (no cross-host writer existed);
+    # fall back to the merged manifest for checkpoints from older saves
+    manifest = _read_json(os.path.join(step_dir, _manifest_name(host_id)))
+    if manifest is None:
+        manifest = _read_json(os.path.join(step_dir, "manifest.json"))
+    if manifest is None or "checksums" not in manifest:
+        raise CorruptCheckpointError(
+            f"no readable manifest for host {host_id} in {step_dir}")
+    # the manifest names the shard this save actually wrote (extension
+    # depends on compression), so it is authoritative over directory listing
+    prefix = f"shard_{host_id:05d}"
+    names = [n for n in manifest["checksums"] if n.startswith(prefix)]
+    if not names:
+        raise CorruptCheckpointError(
+            f"no shard for host {host_id} in {step_dir} manifests")
+    shard = os.path.join(step_dir, names[0])
+    try:
+        with open(shard, "rb") as f:
+            comp = f.read()
+    except OSError as e:
+        raise CorruptCheckpointError(
+            f"shard {shard} unreadable: {e}") from e
+    want = zlib.crc32(comp)
+    have = manifest["checksums"][names[0]]
+    if have != want:
+        raise CorruptCheckpointError(
+            f"checksum mismatch in {shard}: {have} != {want}")
+    try:
+        if shard.endswith(".zst"):
+            payload = _require_zstd(f"reading {shard}").ZstdDecompressor() \
+                .decompress(comp)
+        else:
+            payload = comp
+        raw = msgpack.unpackb(payload, raw=False)
+        flat = {k: _unpack_array(v) for k, v in raw.items()}
+    except ImportError:
+        raise  # missing optional dep, not corruption
+    except Exception as e:  # truncated/garbled payload classes vary by lib
+        raise CorruptCheckpointError(
+            f"shard {shard} failed to decode: {e}") from e
+    # per-leaf verification (manifests from before PR 8 lack the field)
+    for key, crc in manifest.get("leaf_checksums", {}).items():
+        if key not in flat:
+            raise CorruptCheckpointError(
+                f"shard {shard} is missing leaf {key!r} named by its "
+                "manifest")
+        got = zlib.crc32(flat[key].tobytes())
+        if got != crc:
+            raise CorruptCheckpointError(
+                f"leaf checksum mismatch for {key!r} in {shard}: "
+                f"{crc} != {got}")
+    return flat
+
+
 def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree:
     """Restore ``step`` into the structure/dtypes of ``like``.
 
@@ -311,35 +466,12 @@ def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree
     ``tie_embeddings=True`` model (no ``lm_head`` leaves) from an untied
     checkpoint — or the reverse — raises a ValueError that says which
     ``lm_head`` entries are extra/missing and why, instead of a bare
-    missing-leaf failure.
+    missing-leaf failure. Corruption raises
+    :class:`CorruptCheckpointError` (shard and per-leaf checksums are
+    verified against the per-host manifest).
     """
     step_dir = os.path.join(directory, f"step_{step:010d}")
-    # per-host manifests are authoritative (no cross-host writer existed);
-    # fall back to the merged manifest for checkpoints from older saves
-    manifest = _read_json(os.path.join(step_dir, _manifest_name(host_id)))
-    if manifest is None:
-        with open(os.path.join(step_dir, "manifest.json")) as f:
-            manifest = json.load(f)
-    # the manifest names the shard this save actually wrote (extension
-    # depends on compression), so it is authoritative over directory listing
-    prefix = f"shard_{host_id:05d}"
-    names = [n for n in manifest["checksums"] if n.startswith(prefix)]
-    if not names:
-        raise IOError(f"no shard for host {host_id} in {step_dir} manifests")
-    shard = os.path.join(step_dir, names[0])
-    with open(shard, "rb") as f:
-        comp = f.read()
-    want = zlib.crc32(comp)
-    have = manifest["checksums"][names[0]]
-    if have != want:
-        raise IOError(f"checksum mismatch in {shard}: {have} != {want}")
-    if shard.endswith(".zst"):
-        payload = _require_zstd(f"reading {shard}").ZstdDecompressor() \
-            .decompress(comp)
-    else:
-        payload = comp
-    raw = msgpack.unpackb(payload, raw=False)
-    flat = {k: _unpack_array(v) for k, v in raw.items()}
+    flat = _read_verified(step_dir, host_id)
 
     from repro.core.labels import path_str
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -380,15 +512,40 @@ def restore(directory: str, step: int, like: PyTree, host_id: int = 0) -> PyTree
 
 def restore_latest(directory: str, like: PyTree,
                    host_id: int = 0) -> Optional[Tuple[PyTree, int]]:
-    """Auto-resume: (tree, step) of the newest committed checkpoint, or None."""
-    step = latest_step(directory)
-    if step is None:
-        return None
-    return restore(directory, step, like, host_id), step
+    """Auto-resume: (tree, step) of the newest **verifiable** committed
+    checkpoint, or None.
+
+    Uncommitted step dirs never enter the candidate list (no COMMITTED
+    marker). A committed-but-unusable candidate — corrupted shard, failed
+    shard/leaf checksum, missing shard for this host, unreadable manifest
+    — is skipped with a warning and the next-newest committed step is
+    tried: an unreadable latest checkpoint costs one checkpoint interval,
+    not the run. Structural mismatches against ``like`` (tied/untied,
+    missing leaves, shape changes) still raise: they would fail
+    identically at every step, so degrading across them only hides a
+    caller bug.
+    """
+    for step in sorted(_list_steps(directory), reverse=True):
+        try:
+            return restore(directory, step, like, host_id), step
+        except (CorruptCheckpointError, OSError) as e:
+            warnings.warn(
+                f"checkpoint step {step} in {directory} failed "
+                f"verification ({e}); falling back to the previous "
+                "committed step")
+    return None
 
 
 class AsyncSave:
-    """Handle for an in-flight asynchronous checkpoint."""
+    """Handle for an in-flight asynchronous checkpoint.
+
+    Worker-thread exceptions are captured and **re-raised** from both
+    ``wait()`` and the ``done`` property — a failed background save must
+    surface at the next touch of the handle, never be mistaken for a save
+    that is merely still in flight (the old failure mode: the error sat
+    silently in ``self.error`` until a caller happened to ``wait()``,
+    while ``done`` reported a clean True).
+    """
 
     def __init__(self, thread: threading.Thread):
         self._thread = thread
@@ -405,12 +562,19 @@ class AsyncSave:
 
     @property
     def done(self) -> bool:
-        return not self._thread.is_alive()
+        """True once the save finished **successfully**; raises the
+        worker's exception if it failed (False while still in flight)."""
+        if self._thread.is_alive():
+            return False
+        if self.error is not None:
+            raise self.error
+        return True
 
 
 def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
                n_hosts: int = 1, keep: int = 3, compression: str = "auto",
-               barrier_timeout: float = 0.0) -> AsyncSave:
+               barrier_timeout: float = 0.0, io_retries: int = 3,
+               io_backoff: float = 0.05) -> AsyncSave:
     """Checkpoint without blocking the training loop.
 
     Device arrays are snapshotted to host memory synchronously (cheap; the
@@ -431,7 +595,8 @@ def save_async(directory: str, step: int, tree: PyTree, host_id: int = 0,
             handle.path = save(directory, step, flat_tree,
                                host_id=host_id, n_hosts=n_hosts, keep=keep,
                                compression=compression,
-                               barrier_timeout=barrier_timeout)
+                               barrier_timeout=barrier_timeout,
+                               io_retries=io_retries, io_backoff=io_backoff)
         except BaseException as e:  # surfaced on wait()
             handle.error = e
 

@@ -132,6 +132,14 @@ the next call instead of serving stale compilations. (Inside an outer
 ``jax.jit`` — e.g. a jitted train step — the read still happens at the
 outer trace time; the outer cache is not keyed on it.)
 
+Every kernel route additionally runs under a **failure guard**: a kernel
+path that raises (a backend that cannot lower the Pallas call, a driver
+regression, or a ``REPRO_FAULTS`` ``dispatch_fail`` injection) degrades to
+the jnp reference instead of killing the run — warned once per (op,
+exception type), counted per op in :func:`fallback_counts` so the training
+driver can surface degradations in its step logs. Kernel failures surface
+at trace/lower time (host-side), which is exactly where the guard sits.
+
 Entry points (scalar lr/beta/gscale may be traced schedule outputs). All
 accept ``gscale`` — a scalar multiplied into the gradient at read time
 inside the kernels, used by the trainer to fold the global-norm clip factor
@@ -202,6 +210,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -368,6 +377,63 @@ def _mapped(body, plan, n_arrays, n_outs=1):
 
 
 # --------------------------------------------------------------------------
+# Graceful degradation: kernel-route failure capture. A kernel path that
+# fails on some backend surfaces its error at trace/lower time — host-side
+# Python, exactly where these wrappers sit — so a failing kernel route
+# degrades to the jnp reference instead of killing the run. Each (op,
+# exception type) is warned once per process; per-op counts are exposed so
+# the training driver can log degradations at its metrics cadence.
+# --------------------------------------------------------------------------
+
+_FALLBACK_COUNTS: dict = {}       # op -> kernel->reference degradations
+_FALLBACK_LOGGED: set = set()     # (op, exc type): warn once per process
+
+
+def fallback_counts() -> dict:
+    """Per-op count of kernel-route failures degraded to the reference."""
+    return dict(_FALLBACK_COUNTS)
+
+
+def reset_fallbacks() -> None:
+    """Forget recorded degradations (tests isolate cases with this)."""
+    _FALLBACK_COUNTS.clear()
+    _FALLBACK_LOGGED.clear()
+
+
+def _dispatch_fault_gate(op: str) -> None:
+    # chaos hook (REPRO_FAULTS dispatch_fail@op): no-op unless set; the
+    # env check keeps the training package off dispatch's import path
+    if not os.environ.get("REPRO_FAULTS"):
+        return
+    from repro.training import faults
+    faults.dispatch_gate(op)
+
+
+def _guarded(op: str, kernel_thunk, ref_thunk):
+    """Run the kernel route; degrade to the reference on any failure.
+
+    Catches Exception only: a KeyboardInterrupt or a SimulatedKill
+    (BaseException) must never be absorbed into a silent fallback. The
+    degradation is baked into whatever jit trace is being built, so a
+    compiled train step that hit a failing kernel route keeps running the
+    reference until retraced.
+    """
+    try:
+        _dispatch_fault_gate(op)
+        return kernel_thunk()
+    except Exception as e:
+        _FALLBACK_COUNTS[op] = _FALLBACK_COUNTS.get(op, 0) + 1
+        key = (op, type(e).__name__)
+        if key not in _FALLBACK_LOGGED:
+            _FALLBACK_LOGGED.add(key)
+            warnings.warn(
+                f"dispatch: kernel route for {op!r} failed "
+                f"({type(e).__name__}: {e}); degrading to the jnp "
+                "reference path")
+        return ref_thunk()
+
+
+# --------------------------------------------------------------------------
 # Entry points. Thin Python wrappers resolve REPRO_FUSED and the sharding
 # plan per call; the jitted impls take both as static args (cache-keyed).
 # --------------------------------------------------------------------------
@@ -406,9 +472,12 @@ def normalize(g: jnp.ndarray, kind: str = "col", eps: float = 1e-8, *,
     mode = resolve_mode() if mode is None else mode
     route, plan = _route(g.shape, kind, mode, sharding)
     has_gs, gs = _gs_arg(gscale)
-    return _normalize_impl(g, gs, kind=kind, eps=eps, mode=mode,
-                           plan="ref" if route == "ref" else plan,
-                           has_gs=has_gs)
+    kw = dict(kind=kind, eps=eps, mode=mode, has_gs=has_gs)
+    if route == "kernel":
+        return _guarded("normalize",
+                        lambda: _normalize_impl(g, gs, plan=plan, **kw),
+                        lambda: _normalize_impl(g, gs, plan="ref", **kw))
+    return _normalize_impl(g, gs, plan="ref", **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
@@ -442,9 +511,13 @@ def norm_update(theta: jnp.ndarray, g: jnp.ndarray, lr, kind: str = "col",
     mode = resolve_mode() if mode is None else mode
     route, plan = _route(theta.shape, kind, mode, sharding)
     has_gs, gs = _gs_arg(gscale)
-    return _norm_update_impl(theta, g, lr, gs, kind=kind, eps=eps, mode=mode,
-                             plan="ref" if route == "ref" else plan,
-                             has_gs=has_gs)
+    kw = dict(kind=kind, eps=eps, mode=mode, has_gs=has_gs)
+    if route == "kernel":
+        return _guarded(
+            "norm_update",
+            lambda: _norm_update_impl(theta, g, lr, gs, plan=plan, **kw),
+            lambda: _norm_update_impl(theta, g, lr, gs, plan="ref", **kw))
+    return _norm_update_impl(theta, g, lr, gs, plan="ref", **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
@@ -488,9 +561,13 @@ def momentum_norm(m: jnp.ndarray, g: jnp.ndarray, beta, kind: str = "col",
     mode = resolve_mode() if mode is None else mode
     route, plan = _route(m.shape, kind, mode, sharding)
     has_gs, gs = _gs_arg(gscale)
-    return _momentum_norm_impl(m, g, beta, gs, kind=kind, eps=eps, mode=mode,
-                               plan="ref" if route == "ref" else plan,
-                               has_gs=has_gs)
+    kw = dict(kind=kind, eps=eps, mode=mode, has_gs=has_gs)
+    if route == "kernel":
+        return _guarded(
+            "momentum_norm",
+            lambda: _momentum_norm_impl(m, g, beta, gs, plan=plan, **kw),
+            lambda: _momentum_norm_impl(m, g, beta, gs, plan="ref", **kw))
+    return _momentum_norm_impl(m, g, beta, gs, plan="ref", **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "eps", "mode", "plan",
@@ -530,9 +607,16 @@ def momentum_norm_update(theta: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray,
     mode = resolve_mode() if mode is None else mode
     route, plan = _route(theta.shape, kind, mode, sharding)
     has_gs, gs = _gs_arg(gscale)
-    return _momentum_norm_update_impl(
-        theta, m, g, beta, lr, gs, kind=kind, eps=eps, mode=mode,
-        plan="ref" if route == "ref" else plan, has_gs=has_gs)
+    kw = dict(kind=kind, eps=eps, mode=mode, has_gs=has_gs)
+    if route == "kernel":
+        return _guarded(
+            "momentum_norm_update",
+            lambda: _momentum_norm_update_impl(theta, m, g, beta, lr, gs,
+                                               plan=plan, **kw),
+            lambda: _momentum_norm_update_impl(theta, m, g, beta, lr, gs,
+                                               plan="ref", **kw))
+    return _momentum_norm_update_impl(theta, m, g, beta, lr, gs, plan="ref",
+                                      **kw)
 
 
 # --------------------------------------------------------------------------
@@ -768,9 +852,13 @@ def xent_loss(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray, *,
     if route == "ref":
         return _xent_ref(h, w, labels, vocab_size=vocab_size,
                          transposed=transposed)
-    return _xent_fused(vocab_size, use_interpret(mode), plan,
-                       tuple(block) if block is not None else None,
-                       transposed)(h, w, labels)
+    return _guarded(
+        "xent_loss",
+        lambda: _xent_fused(vocab_size, use_interpret(mode), plan,
+                            tuple(block) if block is not None else None,
+                            transposed)(h, w, labels),
+        lambda: _xent_ref(h, w, labels, vocab_size=vocab_size,
+                          transposed=transposed))
 
 
 # --------------------------------------------------------------------------
@@ -989,9 +1077,13 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     if route == "ref" or v.shape[:3] != k.shape[:3]:
         return _attn_ref(q, k, v, scale=scale, causal=causal, kv_len=kv_len)
     kl = jnp.asarray(k.shape[1] if kv_len is None else kv_len, jnp.int32)
-    return _attn_fused(float(scale), causal, use_interpret(mode), plan,
-                       tuple(block) if block is not None else None)(
-                           q, k, v, kl)
+    return _guarded(
+        "flash_attention",
+        lambda: _attn_fused(float(scale), causal, use_interpret(mode), plan,
+                            tuple(block) if block is not None else None)(
+                                q, k, v, kl),
+        lambda: _attn_ref(q, k, v, scale=scale, causal=causal,
+                          kv_len=kv_len))
 
 
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate

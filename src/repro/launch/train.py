@@ -4,6 +4,16 @@ Runs a real training loop on whatever devices exist (CPU here, a TPU slice
 in production), with sharding from the same rules table the dry-run uses,
 deterministic resumable data, periodic checkpointing and auto-resume.
 
+Resilience (PR 8): the step runs under the in-jit anomaly guard
+(:mod:`repro.training.resilience`) — non-finite loss/grad-norm or a loss
+spike skips the update bitwise; after ``--max-bad-steps`` consecutive bad
+steps the driver rolls back to the last verifiable checkpoint and cuts the
+learning rate by ``--rollback-lr-cut`` (recompiling the step with the new
+peak LR). SIGTERM triggers a final synchronous checkpoint and a clean
+exit, so a preempted run under ``--resume auto`` loses at most the current
+step. ``REPRO_FAULTS`` (see :mod:`repro.training.faults`) injects
+deterministic chaos into all of it.
+
 Example (end-to-end ~100M-param pretraining driver):
   PYTHONPATH=src python -m repro.launch.train --arch llama-130m \
       --optimizer scale --steps 200 --batch 16 --seq 256 \
@@ -12,6 +22,7 @@ Example (end-to-end ~100M-param pretraining driver):
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -20,13 +31,16 @@ from repro.checkpoint import restore_latest, save, save_async
 from repro.configs import get_arch
 from repro.core import linear_warmup_cosine, make_optimizer
 from repro.data import make_dataset
+from repro.kernels import dispatch
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.models.sharding import Rules
-from repro.training import init_state, make_train_step
+from repro.training import (GuardPolicy, init_guard_state, init_state,
+                            make_train_step, resolve_plan)
 
 
-def build(args):
+def build(args, lr_scale: float = 1.0):
+    """(cfg, tx) for the run. ``lr_scale`` scales the peak LR (rollback cut)."""
     cfg = get_arch(args.arch, smoke=args.smoke)
     if args.seq and cfg.attn_kv_block > args.seq:
         cfg.attn_kv_block = cfg.attn_q_block = max(16, args.seq // 4)
@@ -35,7 +49,7 @@ def build(args):
         cfg.dtype = args.dtype
     if getattr(args, "tie_embeddings", False):
         cfg.tie_embeddings = True
-    sched = linear_warmup_cosine(args.lr, args.steps)
+    sched = linear_warmup_cosine(args.lr * lr_scale, args.steps)
     if cfg.tie_embeddings:
         # feature-detect rather than enumerate names (like the trainer's
         # shardings/grad_scale detection): any optimizer whose factory
@@ -79,13 +93,41 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the in-jit anomaly guard (finite checks "
+                         "on loss/grad norm, step skipping, rollback)")
+    ap.add_argument("--spike-factor", type=float, default=0.0,
+                    help="skip steps whose loss exceeds this multiple of "
+                         "the accepted-loss EMA (0 disables the spike "
+                         "check; finite checks stay on)")
+    ap.add_argument("--spike-warmup", type=int, default=20,
+                    help="accepted steps before the spike check arms")
+    ap.add_argument("--max-bad-steps", type=int, default=10,
+                    help="consecutive guard-skipped steps before rolling "
+                         "back to the last checkpoint with an LR cut "
+                         "(0 = never roll back, skip forever)")
+    ap.add_argument("--rollback-lr-cut", type=float, default=0.5,
+                    help="multiply the peak LR by this on every rollback")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="abort the run after this many rollbacks (a "
+                         "deterministic fault replays identically after "
+                         "restore, so an unbounded loop would never "
+                         "terminate)")
     args = ap.parse_args(argv)
+
+    guard = None if args.no_guard else GuardPolicy(
+        spike_factor=args.spike_factor, spike_warmup=args.spike_warmup,
+        max_bad_steps=args.max_bad_steps)
+    faults = resolve_plan()  # REPRO_FAULTS, read once, outside jit
+    if faults is not None:
+        print(f"fault injection active: {faults}")
 
     cfg, tx = build(args)
     rules = Rules(cfg.rule_overrides)
     n_dev = len(jax.devices())
     mesh = make_host_mesh(data=n_dev)
-    print(f"arch={cfg.name} optimizer={args.optimizer} devices={n_dev}")
+    print(f"arch={cfg.name} optimizer={args.optimizer} devices={n_dev} "
+          f"guard={'off' if guard is None else 'on'}")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     if n_dev > 1:
@@ -97,7 +139,7 @@ def main(argv=None):
         params = jax.device_put(
             params, tree_shardings(param_logical_axes(cfg), mesh, rules,
                                    params))
-    state = init_state(params, tx)
+    state = init_state(params, tx, guard=guard is not None)
     start_step = 0
     if args.resume == "auto" and args.ckpt_dir:
         got = restore_latest(args.ckpt_dir, state)
@@ -107,31 +149,96 @@ def main(argv=None):
 
     ds = make_dataset(cfg, seq_len=args.seq, global_batch=args.batch,
                       seed=args.seed)
-    step_fn = make_train_step(cfg, tx, grad_accum=args.grad_accum,
-                              clip_norm=args.clip_norm, rules=rules,
-                              mesh=mesh if n_dev > 1 else None, donate=True)
+
+    def make_step(tx):
+        return make_train_step(cfg, tx, grad_accum=args.grad_accum,
+                               clip_norm=args.clip_norm, rules=rules,
+                               mesh=mesh if n_dev > 1 else None, donate=True,
+                               guard=guard, faults=faults)
+
+    step_fn = make_step(tx)
+
+    # SIGTERM (preemption notice) -> finish the current step, write a final
+    # synchronous checkpoint, exit cleanly; --resume auto picks it up
+    stop = {"sigterm": False}
+
+    def _on_sigterm(signum, frame):
+        del signum, frame
+        stop["sigterm"] = True
+
+    try:
+        prev_handler = signal.signal(signal.SIGTERM, _on_sigterm)
+    except ValueError:  # not the main thread (embedded use): no handler
+        prev_handler = None
 
     t0 = time.time()
     pending = None
     tokens_per_step = args.batch * args.seq
-    for step in range(start_step, args.steps):
-        batch = ds.host_batch_at(step)
-        state, metrics = step_fn(state, batch)
-        if (step + 1) % args.log_every == 0 or step == start_step:
-            dt = time.time() - t0
-            tput = tokens_per_step * (step + 1 - start_step) / max(dt, 1e-9)
-            print(f"step {step+1:6d} loss {float(metrics['loss']):.4f} "
-                  f"|g| {float(metrics['grad_norm']):.3f} "
-                  f"tok/s {tput:,.0f}", flush=True)
-        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            if pending is not None:
-                pending.wait()        # one checkpoint in flight at a time
-            pending = save_async(args.ckpt_dir, step + 1, state)
-    if pending is not None:
-        pending.wait()
-    if args.ckpt_dir:
-        save(args.ckpt_dir, args.steps, state)
-    print(f"done: final loss {float(metrics['loss']):.4f}")
+    step, done_steps = start_step, 0
+    lr_scale, rollbacks = 1.0, 0
+    metrics = {"loss": float("nan")}
+    try:
+        while step < args.steps and not stop["sigterm"]:
+            batch = ds.host_batch_at(step)
+            state, metrics = step_fn(state, batch)
+            if guard is not None and float(metrics["rollback"]):
+                # in-jit code flagged an unrecoverable streak; the host
+                # takes the action jit cannot: restore + LR cut + retrace
+                lr_scale *= args.rollback_lr_cut
+                rollbacks += 1
+                if rollbacks > args.max_rollbacks:
+                    raise RuntimeError(
+                        f"giving up after {args.max_rollbacks} rollbacks: "
+                        f"the run keeps hitting {args.max_bad_steps} "
+                        f"consecutive bad steps")
+                got = restore_latest(args.ckpt_dir, state) \
+                    if args.ckpt_dir else None
+                if got is not None:
+                    state, step = got
+                    print(f"rollback #{rollbacks}: restored step {step}, "
+                          f"peak lr x{lr_scale:g}", flush=True)
+                else:
+                    # nothing to roll back to: reset the streak and push on
+                    # with the cut LR (the guard keeps skipping bad steps)
+                    step += 1
+                    print(f"rollback #{rollbacks}: no checkpoint in "
+                          f"{args.ckpt_dir or '<none>'}; continuing with "
+                          f"peak lr x{lr_scale:g}", flush=True)
+                state = state._replace(guard=init_guard_state())
+                _, tx = build(args, lr_scale)
+                step_fn = make_step(tx)
+                continue
+            step += 1
+            done_steps += 1
+            if step % args.log_every == 0 or done_steps == 1:
+                dt = time.time() - t0
+                tput = tokens_per_step * done_steps / max(dt, 1e-9)
+                line = (f"step {step:6d} loss {float(metrics['loss']):.4f} "
+                        f"|g| {float(metrics['grad_norm']):.3f} "
+                        f"tok/s {tput:,.0f}")
+                if guard is not None:
+                    line += (f" skipped {int(metrics['skipped'])}"
+                             f" rollbacks {rollbacks}")
+                fb = dispatch.fallback_counts()
+                if fb:
+                    line += f" kernel-fallbacks {sum(fb.values())}"
+                print(line, flush=True)
+            if args.ckpt_dir and step % args.ckpt_every == 0:
+                if pending is not None:
+                    pending.wait()        # one checkpoint in flight at a time
+                pending = save_async(args.ckpt_dir, step, state)
+        if pending is not None:
+            pending.wait()
+        if args.ckpt_dir:
+            save(args.ckpt_dir, step, state)
+        if stop["sigterm"]:
+            print(f"sigterm: checkpointed step {step}, exiting cleanly",
+                  flush=True)
+        else:
+            print(f"done: final loss {float(metrics['loss']):.4f}")
+    finally:
+        if prev_handler is not None:
+            signal.signal(signal.SIGTERM, prev_handler)
     return float(metrics["loss"])
 
 

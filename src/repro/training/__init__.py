@@ -1,4 +1,10 @@
 from .trainer import TrainState, init_state, make_eval_step, make_train_step
 from .serving import ServeState, greedy_generate, make_decode_step, make_prefill_step
+from .resilience import (GuardPolicy, GuardState, guard_step, guard_verdict,
+                         guarded_select, init_guard_state, inject_grad_faults)
+from .faults import FaultPlan, SimulatedKill, parse_faults, resolve_plan
 __all__ = ["TrainState", "init_state", "make_eval_step", "make_train_step",
-           "ServeState", "greedy_generate", "make_decode_step", "make_prefill_step"]
+           "ServeState", "greedy_generate", "make_decode_step", "make_prefill_step",
+           "GuardPolicy", "GuardState", "guard_step", "guard_verdict",
+           "guarded_select", "init_guard_state", "inject_grad_faults",
+           "FaultPlan", "SimulatedKill", "parse_faults", "resolve_plan"]

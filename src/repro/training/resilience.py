@@ -1,0 +1,151 @@
+"""In-jit anomaly guard: step-level skip + host-side rollback signalling.
+
+Low-state optimizers (SCALE keeps one momentum group and two Adam vectors)
+have *less* state to absorb a bad step than Adam — a single NaN/Inf or
+loss-spike update lands on the parameters almost directly, so the guard
+sits inside the jitted train step and decides **per step** whether the
+freshly computed update may be applied:
+
+  * **finite checks** on the loss and the global gradient norm;
+  * a **running loss-spike statistic**: an EMA of the (accepted) losses —
+    a step whose loss exceeds ``spike_factor * ema`` after ``spike_warmup``
+    accepted steps is anomalous even if finite (the stable_spam AdaClip
+    idea at step granularity);
+  * a bad step is **skipped**: params and optimizer state pass through
+    bitwise (element-select against the old trees — no Python branching on
+    traced values, the policy is pure ``jnp.where``), a ``skipped``
+    counter increments and the bad loss never poisons the EMA;
+  * after ``max_bad_steps`` *consecutive* bad steps the guard raises the
+    ``rollback`` flag in the step metrics — the host (``launch/train.py``)
+    reacts by restoring the last verifiable checkpoint and cutting the
+    learning rate, which is exactly the action in-jit code cannot take.
+
+Everything here is shape-polymorphic scalar arithmetic: the guard adds no
+HBM traffic beyond the elementwise select of the two parameter trees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GuardPolicy(NamedTuple):
+    """Static guard configuration (Python values, resolved outside jit).
+
+    ``spike_factor``: accepted-loss-EMA multiple above which a finite loss
+    is still anomalous; ``0`` disables the spike check (finite checks stay
+    on). ``spike_warmup``: accepted steps before the spike check arms —
+    the first losses of a fresh run are legitimately huge. ``ema_beta``:
+    decay of the accepted-loss EMA. ``max_bad_steps``: consecutive bad
+    steps before the ``rollback`` flag trips; ``0`` means never (skip
+    forever).
+    """
+    spike_factor: float = 0.0
+    spike_warmup: int = 20
+    ema_beta: float = 0.99
+    max_bad_steps: int = 0
+
+
+class GuardState(NamedTuple):
+    """Traced guard state, carried in ``TrainState.guard``.
+
+    ``loss_ema`` is a debiased-by-count EMA over accepted losses only
+    (``ema_count`` accepted steps so far); ``skipped`` counts skipped
+    steps over the run; ``consecutive_bad`` the current bad streak.
+    """
+    loss_ema: jnp.ndarray
+    ema_count: jnp.ndarray
+    skipped: jnp.ndarray
+    consecutive_bad: jnp.ndarray
+
+
+def init_guard_state() -> GuardState:
+    return GuardState(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def guard_verdict(policy: GuardPolicy, gstate: GuardState, loss, grad_norm):
+    """-> boolean scalar: may this step's update be applied?
+
+    Pure traced arithmetic (no Python branches on traced values — the only
+    ``if`` is on the static ``spike_factor``). The spike check compares
+    against the *debiased* EMA and only arms once ``spike_warmup`` steps
+    have been accepted.
+    """
+    ok = jnp.isfinite(loss) & jnp.isfinite(grad_norm)
+    if policy.spike_factor > 0:
+        armed = gstate.ema_count >= policy.spike_warmup
+        # debias by the accumulated weight so early EMAs are not biased
+        # toward the zero init (standard Adam-style correction)
+        beta = jnp.float32(policy.ema_beta)
+        weight = 1.0 - beta ** gstate.ema_count.astype(jnp.float32)
+        mean = gstate.loss_ema / jnp.maximum(weight, 1e-12)
+        calm = loss <= policy.spike_factor * mean
+        ok = ok & (calm | ~armed)
+    return ok
+
+
+def guard_step(policy: GuardPolicy, gstate: GuardState, ok, loss):
+    """Advance the guard state given this step's verdict.
+
+    Returns ``(new_state, rollback)``. The EMA ingests accepted losses
+    only; the bad streak resets on any accepted step. ``rollback`` trips
+    when the streak reaches ``max_bad_steps`` (statically never when the
+    policy disables it).
+    """
+    beta = jnp.float32(policy.ema_beta)
+    loss = jnp.asarray(loss, jnp.float32)
+    ema = jnp.where(ok, beta * gstate.loss_ema + (1.0 - beta) * loss,
+                    gstate.loss_ema)
+    count = gstate.ema_count + ok.astype(jnp.int32)
+    streak = jnp.where(ok, 0, gstate.consecutive_bad + 1)
+    skipped = gstate.skipped + (~ok).astype(jnp.int32)
+    if policy.max_bad_steps > 0:
+        rollback = streak >= policy.max_bad_steps
+    else:
+        rollback = jnp.zeros((), bool)
+    return GuardState(ema, count, skipped, streak), rollback
+
+
+def guarded_select(ok, new_tree: Any, old_tree: Any) -> Any:
+    """Elementwise select: ``new`` where ok, else ``old`` — bitwise.
+
+    ``jnp.where`` selects per element, so a skipped step returns the old
+    buffers bit-for-bit (NaN/Inf in the discarded candidate never
+    propagates through a select, unlike arithmetic masking).
+    """
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o), new_tree, old_tree)
+
+
+def inject_grad_faults(plan, step, grads):
+    """Corrupt ``grads`` at the plan's nan/inf steps (traced, bitwise-inert).
+
+    ``plan`` is a static :class:`repro.training.faults.FaultPlan` resolved
+    outside jit; ``step`` the traced global step counter. At a non-fault
+    step the select leaves every leaf bitwise untouched, so a faulted
+    build of the train step is exactly the clean build everywhere else.
+    Only inexact (float) leaves are corrupted — integer leaves have no NaN.
+    """
+    if plan is None or not plan.any_grad_faults:
+        return grads
+
+    def hit(steps):
+        return functools.reduce(
+            jnp.logical_or,
+            [step == k for k in steps],
+            jnp.zeros((), bool))
+
+    bad_nan = hit(plan.grad_fault_steps("nan"))
+    bad_inf = hit(plan.grad_fault_steps("inf"))
+
+    def corrupt(g):
+        if not jnp.issubdtype(g.dtype, jnp.inexact):
+            return g
+        g = jnp.where(bad_nan, jnp.asarray(jnp.nan, g.dtype), g)
+        return jnp.where(bad_inf, jnp.asarray(jnp.inf, g.dtype), g)
+
+    return jax.tree_util.tree_map(corrupt, grads)

@@ -1,6 +1,7 @@
 """Training-step factory: loss + grad (with microbatch accumulation and
 optional global-norm clipping) + optimizer update, all inside one jitted
-function suitable for pjit sharding.
+function suitable for pjit sharding. An optional in-jit anomaly guard
+(:mod:`repro.training.resilience`) vets every update before it is applied.
 """
 from __future__ import annotations
 
@@ -14,16 +15,25 @@ from jax.sharding import Mesh
 from repro.core.types import GradientTransformation, apply_updates, global_norm
 from repro.models import loss_fn
 from repro.models.sharding import Rules
+from repro.training.resilience import (GuardPolicy, guard_step, guard_verdict,
+                                       guarded_select, init_guard_state,
+                                       inject_grad_faults)
 
 
 class TrainState(NamedTuple):
     step: jnp.ndarray
     params: Any
     opt_state: Any
+    # None unless the train step was built with a GuardPolicy (a None
+    # subtree has no leaves, so guard-less states checkpoint identically
+    # to the historical 3-field layout)
+    guard: Any = None
 
 
-def init_state(params, tx: GradientTransformation) -> TrainState:
-    return TrainState(jnp.zeros((), jnp.int32), params, tx.init(params))
+def init_state(params, tx: GradientTransformation,
+               guard: bool = False) -> TrainState:
+    return TrainState(jnp.zeros((), jnp.int32), params, tx.init(params),
+                      init_guard_state() if guard else None)
 
 
 def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
@@ -33,7 +43,9 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                     norm_metrics: bool = True,
                     fused_apply: Optional[bool] = None,
                     mesh: Optional[Mesh] = None,
-                    donate: bool = False):
+                    donate: bool = False,
+                    guard: Optional[GuardPolicy] = None,
+                    faults=None):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
     ``grad_accum > 1`` splits the batch into microbatches along axis 0 and
@@ -74,6 +86,20 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     ``donate_argnums=(0,)``: the TrainState buffers are donated, which —
     combined with the apply kernels' ``input_output_aliases`` — makes the
     fused theta/momentum writes truly in-place (no fresh allocation).
+
+    ``guard``: a :class:`repro.training.resilience.GuardPolicy`. The step
+    then requires a guard-carrying state (``init_state(..., guard=True)``)
+    and vets every update in-jit — non-finite loss/grad-norm or a loss
+    spike skips the update (params and optimizer state pass through
+    bitwise, via element-select), and the metrics gain ``skipped`` /
+    ``bad_step`` / ``rollback`` (the latter trips after
+    ``guard.max_bad_steps`` consecutive bad steps, signalling the host to
+    restore a checkpoint and cut the LR — see ``launch/train.py``).
+
+    ``faults``: a static :class:`repro.training.faults.FaultPlan` (resolved
+    from ``REPRO_FAULTS`` outside jit). Only its gradient faults apply
+    here: grads are corrupted with NaN/Inf at the spec'd steps via a
+    traced select that is bitwise-inert on every other step.
     """
     rules = rules or Rules(cfg.rule_overrides)
     acc_dt = jnp.float32 if accum_dtype == "float32" else jnp.bfloat16
@@ -144,10 +170,15 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
         return loss, metrics, grads
 
     def train_step(state: TrainState, batch: dict):
+        if guard is not None and state.guard is None:
+            raise ValueError(
+                "make_train_step(guard=...) needs a guard-carrying state: "
+                "build it with init_state(params, tx, guard=True)")
         loss, metrics, grads = compute_grads(state.params, batch)
+        grads = inject_grad_faults(faults, state.step, grads)
         out_metrics = {"loss": loss}
         step_kwargs = dict(up_kwargs)
-        if clip_norm > 0 or norm_metrics:
+        if clip_norm > 0 or norm_metrics or guard is not None:
             gnorm = global_norm(grads)
             out_metrics["grad_norm"] = gnorm
         if clip_norm > 0:
@@ -161,21 +192,42 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
         if fused_apply:
             params, opt_state = tx.update_params(grads, state.opt_state,
                                                  state.params, **step_kwargs)
-            if norm_metrics:
+            updates = None
+        else:
+            updates, opt_state = tx.update(grads, state.opt_state, state.params)
+            params = apply_updates(state.params, updates)
+        gstate = state.guard
+        ok = None
+        if guard is not None:
+            # the candidate update is computed unconditionally (NaNs and
+            # all) and element-selected against the old buffers: a select
+            # never propagates values from the discarded branch, so a
+            # skipped step passes params and optimizer state through
+            # bitwise — the exact state a clean run minus this step has
+            ok = guard_verdict(guard, state.guard, loss, gnorm)
+            gstate, rollback = guard_step(guard, state.guard, ok, loss)
+            params = guarded_select(ok, params, state.params)
+            opt_state = guarded_select(ok, opt_state, state.opt_state)
+            out_metrics["skipped"] = gstate.skipped
+            out_metrics["bad_step"] = (~ok).astype(jnp.int32)
+            out_metrics["rollback"] = rollback
+        if norm_metrics:
+            if fused_apply:
                 # diff in f32: bf16 params round small per-element updates
-                # away when differenced in the param dtype
+                # away when differenced in the param dtype (post-guard, so
+                # a skipped step truthfully reports 0)
                 out_metrics["update_norm"] = global_norm(
                     jax.tree_util.tree_map(
                         lambda a, b: (a.astype(jnp.float32)
                                       - b.astype(jnp.float32)),
                         params, state.params))
-        else:
-            updates, opt_state = tx.update(grads, state.opt_state, state.params)
-            params = apply_updates(state.params, updates)
-            if norm_metrics:
-                out_metrics["update_norm"] = global_norm(updates)
+            else:
+                unorm = global_norm(updates)
+                out_metrics["update_norm"] = (
+                    jnp.where(ok, unorm, 0.0) if guard is not None else unorm)
         out_metrics.update({k: v for k, v in metrics.items() if k != "loss"})
-        return TrainState(state.step + 1, params, opt_state), out_metrics
+        return TrainState(state.step + 1, params, opt_state,
+                          gstate), out_metrics
 
     if donate:
         # TrainState donation + the apply kernels' input_output_aliases =
