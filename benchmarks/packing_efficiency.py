@@ -1,0 +1,102 @@
+"""Packed vs padded pretraining batches: pad waste and effective tok/s.
+
+Two layouts of the *same* documents (``data.pipeline``):
+
+  * **packed** — first-fit binned into (B, S) rows with segment ids;
+    attention and loss stay within document boundaries (the MaskSpec
+    segment clause), pad shrinks to the first-fit remainder.
+  * **padded** — one document per row (``unpack_to_rows``), the layout a
+    loader without packing support feeds: every row pays ``S - len`` pad
+    positions of attention + loss work for nothing.
+
+Reported per layout: **pad-waste %** (1 - real tokens / total positions,
+averaged over a few pipeline steps) and the fwd+bwd **effective tok/s**
+(weighted tokens — the honest numerator — over the median step time of a
+jitted ``value_and_grad(loss_fn)``). The padded layout runs more rows for
+the same documents, so its step is both slower *and* earns the same
+effective tokens — the ratio is the throughput the packing path recovers.
+
+Timing follows the other harnesses (:mod:`benchmarks.attention_fused`):
+off-TPU the fused kernels would time the Pallas interpreter, so steps are
+timed under compiled XLA with ``REPRO_FUSED=off``; on TPU the env setting
+is untouched. ``--tiny`` shrinks to smoke shapes (CI bench-smoke);
+the default is the paper's 60M model at S=1024.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fused_off_unless_tpu, json_arg, time_call
+from repro.configs import get_arch
+from repro.data import make_dataset
+from repro.data.pipeline import unpack_to_rows
+from repro.models import init_params, loss_fn
+
+
+def _pad_waste(ds, steps):
+    """Mean pad fraction of the packed batches and their padded unpacking."""
+    packed_waste, padded_waste = [], []
+    for step in range(steps):
+        batch = ds.global_batch_at(step)
+        w = np.asarray(batch["segment_ids"] > 0, np.float64)
+        packed_waste.append(1.0 - w.mean())
+        rows = unpack_to_rows(batch)
+        ru = np.asarray(rows["segment_ids"] > 0, np.float64)
+        padded_waste.append(1.0 - ru.mean())
+    return float(np.mean(packed_waste)), float(np.mean(padded_waste))
+
+
+def run(tiny: bool, json_path=None):
+    cfg = get_arch("llama-60m", smoke=tiny)
+    B, S = (4, 64) if tiny else (8, 1024)
+    if cfg.attn_kv_block > S:
+        cfg.attn_kv_block = cfg.attn_q_block = max(16, S // 4)
+    cfg.loss_chunk = min(cfg.loss_chunk, S)
+    ds = make_dataset(cfg, seq_len=S, global_batch=B, seed=0,
+                      pack_documents=True)
+    pack_w, pad_w = _pad_waste(ds, steps=4)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b)[0], has_aux=False))
+
+    batch = ds.global_batch_at(0)
+    rows = unpack_to_rows(batch)
+    eff_tokens = float(jnp.sum(batch["loss_weights"]))  # same in both
+
+    with fused_off_unless_tpu():
+        us_pack = time_call(step, params, batch, warmup=1, iters=3)
+        us_pad = time_call(step, params, rows, warmup=1, iters=3)
+
+    tps_pack = eff_tokens / (us_pack / 1e6)
+    tps_pad = eff_tokens / (us_pad / 1e6)
+    n_rows = int(rows["tokens"].shape[0])
+    emit([
+        ("pack/pad_waste_pct", None, f"{100 * pack_w:.2f}"),
+        ("pad/pad_waste_pct", None, f"{100 * pad_w:.2f}"),
+        ("pack/rows_per_step", None, f"{B}"),
+        ("pad/rows_per_step", None, f"{n_rows}"),
+        ("pack/step", us_pack, f"eff_tok_s={tps_pack:.0f}"),
+        ("pad/step", us_pad, f"eff_tok_s={tps_pad:.0f}"),
+        ("pack_vs_pad/speedup", None, f"{tps_pack / tps_pad:.2f}x"),
+    ], json_path)
+    # sanity the harness itself: packing must actually reduce pad waste,
+    # and both steps must produce finite losses
+    assert pack_w < pad_w, (pack_w, pad_w)
+    loss_p, _ = step(params, batch)
+    loss_u, _ = step(params, rows)
+    assert bool(jnp.isfinite(loss_p)) and bool(jnp.isfinite(loss_u))
+    return tps_pack, tps_pad
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    run(tiny="--tiny" in argv, json_path=json_arg(argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ _API_REL = "src/repro/core/api.py"
 def _lowerable(stages, fused_kinds) -> bool:
     """Mirror of ``core.pipeline``'s `_use_kernel` static predicate."""
     return (stages.norm in fused_kinds and not stages.adam
+            and not getattr(stages, "adams", False)
             and stages.project is None and not stages.standardize
             and not stages.nesterov)
 

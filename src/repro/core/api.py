@@ -3,7 +3,9 @@
 Names match the paper's tables: scale, sgd, sgd_momentum, adam, adamw,
 stable_spam, muon, swan, galore, fira, apollo, apollo_mini, plus the Table-2
 normalization ablations sgd_colnorm / sgd_rownorm / sgd_signnorm / sgd_nsnorm
-/ sgd_svdnorm.
+/ sgd_svdnorm, and two related-work compositions: adams (AdamS, momentum as
+the normalizer — SGDM-sized state) and adapm (partial momentum: SCALE's
+stage plan with momentum on the embedding *and* the LM head).
 
 ``OPTIMIZER_REGISTRY`` maps each name to an :class:`OptimizerSpec` — the
 factory callable, whether the composition can lower to the fused Pallas
@@ -74,6 +76,15 @@ def _registry() -> dict:
                       lowering=(
                           "as adam (decoupled weight decay folds into the "
                           "Adam stage)")),
+        OptimizerSpec("adams", _opt.adams, lowering=(
+            "never fused: the synthesized AdamS denominator "
+            "(sqrt(b2*m^2 + (1-b2)*g^2)) has no kernel composition; jnp "
+            "write path only")),
+        OptimizerSpec("adapm", _scale.scale, fused=True,
+                      defaults={"momentum_on": ("first", "last")}, lowering=(
+                          "as scale with momentum on the embedding and the "
+                          "LM head (partial momentum); hidden matrices stay "
+                          "stateless normalize / norm_update")),
         OptimizerSpec("stable_spam", _opt.stable_spam_adam, lowering=(
             "never fused: AdaClip/AdaGN run as the tree-level pre hook; "
             "the Adam stage stays jnp")),

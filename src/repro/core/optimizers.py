@@ -47,6 +47,31 @@ def adam(
                           momentum_dtype=momentum_dtype)
 
 
+def adams(
+    lr: Schedule | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    momentum_dtype: str = "float32",
+) -> GradientTransformation:
+    """AdamS (Huang et al., 2025): momentum itself as the normalizer.
+
+    Adam's second-moment buffer is dropped; the denominator is synthesized
+    per step as ``sqrt(b2 * m_hat^2 + (1 - b2) * g^2)``, so the state is
+    SGDM-sized (first moment only) while step sizes stay Adam-like.
+    ``weight_decay`` is decoupled, as in AdamW. ``momentum_dtype=
+    "bfloat16"`` stores the >=2-D first moment in bf16 (cast-on-read/
+    write), halving the *entire* optimizer state — AdamS has no other
+    matrix buffer to keep in f32.
+    """
+    st = Stages(adams=True, weight_decay=weight_decay)
+    return build_pipeline({lab: st for lab in ("first", "last", "matrix",
+                                               "vector")},
+                          lr, b1=b1, b2=b2, eps=eps,
+                          momentum_dtype=momentum_dtype)
+
+
 def sgd(
     lr: Schedule | float,
     momentum: float = 0.0,

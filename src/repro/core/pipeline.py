@@ -195,6 +195,12 @@ class Stages:
                     normalize along the storage axis as defined.
     ``adam``      — full Adam on this group (``weight_decay`` decoupled);
                     mutually exclusive with momentum/norm stages.
+    ``adams``     — AdamS (Huang et al., 2025): Adam's second moment is
+                    replaced by the instantaneous mix
+                    ``sqrt(b2*m_hat^2 + (1-b2)*g^2)``, so the group keeps
+                    SGDM-sized state (first moment only) with Adam-like
+                    per-element step sizes. Mutually exclusive with
+                    ``adam`` and the momentum/norm stages.
     ``project``   — low-rank :class:`Project` stage (self-contained: runs
                     its own adam on the projected gradient).
     ``use_adam_lr`` / ``lr_scaling`` — lr source and Muon's per-matrix
@@ -207,6 +213,7 @@ class Stages:
     ns_steps: int = 5
     flip_transposed: bool = False
     adam: bool = False
+    adams: bool = False
     weight_decay: float = 0.0
     project: Optional[Project] = None
     use_adam_lr: bool = False
@@ -283,8 +290,9 @@ def build_pipeline(
 
     def _use_kernel(st, shape, kind, mode) -> bool:
         return (fused and kind is not None and not st.adam
-                and st.project is None and not st.standardize
-                and not st.nesterov and _kd.supported(shape, kind, mode))
+                and not st.adams and st.project is None
+                and not st.standardize and not st.nesterov
+                and _kd.supported(shape, kind, mode))
 
     def _flat_with_labels(tree):
         leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -301,7 +309,7 @@ def build_pipeline(
                 rshape = ((r, p.shape[-1]) if _proj_left(p.shape)
                           else (p.shape[-2], r))
                 return jnp.zeros(tuple(p.shape[:-2]) + rshape, _f32)
-            if st.adam or st.momentum:
+            if st.adam or st.adams or st.momentum:
                 return jnp.zeros(p.shape, _mu_dtype(lab))
             return _empty(p)
 
@@ -434,6 +442,26 @@ def build_pipeline(
             if st.adam:
                 m_f = m.astype(_f32)
                 upd, m_f, v = _adam_leaf(gsc, m_f, v, count, b1, b2, eps)
+                if st.weight_decay:
+                    if p is None:
+                        raise ValueError(
+                            "weight_decay requires params to be passed to "
+                            "update()")
+                    upd = upd + st.weight_decay * p.astype(_f32)
+                lr_eff = alr_t if st.use_adam_lr else lr_t
+                return (emit(-lr_eff * upd, gsc, p), m_f.astype(m.dtype), v,
+                        pj)
+
+            if st.adams:
+                # AdamS: v is synthesized from the momentum and the raw
+                # gradient at read time — no second-moment buffer, hence
+                # SGDM-sized state with Adam-like per-element step sizes
+                gf = gsc.astype(_f32)
+                m_f = b1 * m.astype(_f32) + (1.0 - b1) * gf
+                m_hat = m_f / (1.0 - b1 ** (count + 1))
+                denom = jnp.sqrt(b2 * m_hat * m_hat
+                                 + (1.0 - b2) * gf * gf) + eps
+                upd = m_hat / denom
                 if st.weight_decay:
                     if p is None:
                         raise ValueError(

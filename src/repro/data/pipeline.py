@@ -12,6 +12,33 @@ access):
     (frequent-token skew drives the paper's LM-head column-norm imbalance,
     Fig. 10) with a deterministic affine bigram backbone the model can learn
     (loss decreases well below ln(V)).
+
+Packed batches (``pack_documents``)
+-----------------------------------
+Production pretraining feeds packed multi-document rows, not one document
+per row: variable-length documents are first-fit binned into fixed-S rows
+so pad tokens (attention + loss work spent on nothing) shrink from
+``1 - mean_len/S`` of the batch to the first-fit remainder. A packed batch
+carries three extra per-token operands, all (B, S):
+
+  * ``segment_ids`` int32 — document id within the row, 1..N in placement
+    order; pad positions are 0. The attention stack masks cross-document
+    (and pad) pairs via the segment clause of
+    :class:`repro.kernels.attention.mask.MaskSpec`.
+  * ``positions`` int32 — *within-document* position 0..len-1 (RoPE and
+    learned position embeddings restart at each boundary); 0 on pad.
+  * ``loss_weights`` f32 — 1.0 where the label is a real within-document
+    next token, 0.0 at document ends and pad; doubles as the loss mask
+    through the weighted ``dispatch.xent_loss``.
+
+Labels are next-token *within* a document (-1 at each document's last
+token and on pad), so no loss term ever crosses a boundary. Everything
+stays a pure function of (seed, step): document lengths come from a
+``RandomState`` keyed on (seed, step) and contents from the same bigram
+generator as the unpacked path. :func:`unpack_to_rows` is the inverse
+used by the parity tests — offset-preserving (each document lands in its
+own row at its packed offset), which keeps the reference attention path
+bitwise identical per document.
 """
 from __future__ import annotations
 
@@ -33,6 +60,8 @@ class DataConfig:
     n_codebooks: int = 0         # audio: tokens (B, n_codebooks, S)
     n_image_tokens: int = 0      # vlm: synthetic patch embeddings
     d_model: int = 0             # vlm: embedding width
+    pack_documents: bool = False  # first-fit packed multi-document rows
+    min_doc_len: int = 8         # packed: shortest sampled document
 
 
 def _zipf_cdf(vocab: int, a: float) -> np.ndarray:
@@ -71,9 +100,63 @@ class SyntheticLM:
         _, toks = jax.lax.scan(step, first, (noise.T, coin.T))
         return toks.T  # (batch, seq)
 
+    # ------------------------------------------------------------- packing
+
+    def _packed_batch(self, step: int) -> dict:
+        """First-fit packed (B, S) batch — see the module docstring.
+
+        Host-side numpy: packing is data-dependent control flow (placement
+        depends on every earlier document's length), so it runs eagerly
+        like a real loader would, staying a pure function of (seed, step).
+        """
+        cfg = self.cfg
+        B, S = cfg.global_batch, cfg.seq_len
+        lo = min(cfg.min_doc_len, S)
+        rng = np.random.RandomState(
+            (1000003 * cfg.seed + 7919 * step + 13) % (2 ** 31 - 1))
+        # enough candidates to fill B rows at the ~(lo+S)/2 mean length
+        n_cand = 4 * B + 8
+        lens = rng.randint(lo, S + 1, size=n_cand)
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        cand = np.asarray(self._gen_tokens(jax.random.fold_in(key, 17),
+                                           n_cand))
+        tokens = np.zeros((B, S), np.int32)
+        labels = np.full((B, S), -1, np.int32)
+        segment_ids = np.zeros((B, S), np.int32)
+        positions = np.zeros((B, S), np.int32)
+        weights = np.zeros((B, S), np.float32)
+        fill = np.zeros(B, np.int64)
+        nseg = np.zeros(B, np.int64)
+        for d in range(n_cand):
+            L = int(lens[d])
+            b = next((b for b in range(B) if S - fill[b] >= L), None)
+            if b is None:
+                if int((S - fill).max()) < lo:
+                    break  # no future candidate can fit anywhere
+                continue
+            o = int(fill[b])
+            doc = cand[d, :L]
+            tokens[b, o:o + L] = doc
+            segment_ids[b, o:o + L] = nseg[b] + 1
+            positions[b, o:o + L] = np.arange(L)
+            labels[b, o:o + L - 1] = doc[1:]       # within-document only:
+            weights[b, o:o + L - 1] = 1.0          # last token predicts
+            fill[b] += L                           # nothing across the
+            nseg[b] += 1                           # boundary
+        return {"tokens": jnp.asarray(tokens),
+                "labels": jnp.asarray(labels),
+                "segment_ids": jnp.asarray(segment_ids),
+                "positions": jnp.asarray(positions),
+                "loss_weights": jnp.asarray(weights)}
+
     def global_batch_at(self, step: int) -> dict:
         """The full (unsharded) batch for ``step``; labels are next-token."""
         cfg = self.cfg
+        if cfg.pack_documents:
+            if cfg.n_codebooks or cfg.n_image_tokens:
+                raise ValueError("pack_documents: packing is a plain-text "
+                                 "format (no audio codebooks / image rows)")
+            return self._packed_batch(step)
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
         if cfg.n_codebooks:
             keys = jax.random.split(key, cfg.n_codebooks)
@@ -102,8 +185,38 @@ class SyntheticLM:
             lambda x: x[host_id * per:(host_id + 1) * per], full)
 
 
+def unpack_to_rows(batch: dict) -> dict:
+    """Packed batch -> one row per document, **offset-preserving**.
+
+    Each document keeps its packed row offset (everything outside it is
+    pad: token 0, label -1, segment/position 0, weight 0). Preserving the
+    offset keeps every per-document computation on the reference attention
+    path *bitwise* identical to the packed run — the document's tokens sit
+    in the same lanes, and all other lanes are masked in both layouts —
+    which is what the packed-vs-unpacked parity tests pin.
+    """
+    toks = np.asarray(batch["tokens"])
+    labs = np.asarray(batch["labels"])
+    segs = np.asarray(batch["segment_ids"])
+    poss = np.asarray(batch["positions"])
+    wts = np.asarray(batch["loss_weights"])
+    rows = {k: [] for k in ("tokens", "labels", "segment_ids", "positions",
+                            "loss_weights")}
+    for b in range(toks.shape[0]):
+        for s in np.unique(segs[b]):
+            if s == 0:
+                continue
+            m = segs[b] == s
+            rows["tokens"].append(np.where(m, toks[b], 0))
+            rows["labels"].append(np.where(m, labs[b], -1))
+            rows["segment_ids"].append(np.where(m, segs[b], 0))
+            rows["positions"].append(np.where(m, poss[b], 0))
+            rows["loss_weights"].append(np.where(m, wts[b], 0.0))
+    return {k: jnp.asarray(np.stack(v)) for k, v in rows.items()}
+
+
 def make_dataset(model_cfg, seq_len: int, global_batch: int,
-                 seed: int = 0) -> SyntheticLM:
+                 seed: int = 0, pack_documents: bool = False) -> SyntheticLM:
     """Dataset matched to a ModelConfig (codebooks / image stubs wired up)."""
     return SyntheticLM(DataConfig(
         vocab_size=model_cfg.vocab_size,
@@ -113,4 +226,5 @@ def make_dataset(model_cfg, seq_len: int, global_batch: int,
         n_codebooks=model_cfg.n_codebooks if model_cfg.family == "audio" else 0,
         n_image_tokens=model_cfg.n_image_tokens if model_cfg.family == "vlm" else 0,
         d_model=model_cfg.d_model,
+        pack_documents=pack_documents,
     ))

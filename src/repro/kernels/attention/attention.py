@@ -28,13 +28,20 @@ flash algorithm and move everything tile-resident:
 
 GQA is native: kv BlockSpecs index the kv head as ``q_head // group``
 (forward/dQ) or iterate the group on the grid (dK/dV) — the H/K repeat is
-never materialized. Causal masking is *rectangular* with a static offset
-``T - S`` (query ``i`` sees keys ``j <= offset + i``; ``T == S`` is
-ordinary causal, ``T > S`` a cached-prefill continuation), folded into the
-tile iota; tile pairs that are fully masked — above the causal diagonal or
-past the traced ``kv_len`` cache-fill bound — skip their compute entirely
-via ``pl.when`` (the ~S^2/2 causal FLOP saving, and decode over a mostly
-empty cache touches only the filled tiles).
+never materialized.
+
+Masking is described by one :class:`~repro.kernels.attention.mask.MaskSpec`
+(see that module): rectangular causal with the static offset ``T - S``
+folded into the tile iota, the traced ``kv_len`` cache-fill bound, and —
+for packed multi-document batches — per-position **segment ids**. Segment
+ids ride as two int32 operands blocked alongside q and kv: the query tile
+sees a (bq, 1) column and the key tile a (1, bk) row, whose broadcasted
+equality intersects the causal/bound clauses elementwise. Tile pairs that
+are fully masked skip their compute entirely via ``pl.when`` — above the
+causal diagonal, past ``kv_len`` (decode over a mostly empty cache touches
+only the filled tiles), or when the two tiles' segment-id *ranges* don't
+overlap (packed documents are contiguous, so segment ids are sorted per
+row and a min/max range test is exact for interior tiles).
 
 Masking mirrors the xent kernels' conventions (out-of-bounds block regions
 are undefined — NaN in interpret mode — and 0*NaN = NaN, so *both*
@@ -42,18 +49,23 @@ operands of every contraction are zeroed on padded positions):
 
   * remainder kv tiles (T % bk): score columns past T are masked to the
     finite ``_NEG`` stand-in and k/v rows past T are zeroed before any
-    contraction that consumes them;
+    contraction that consumes them; segment-id lanes past the bounds are
+    pushed out of the tile-skip min/max reductions;
   * remainder q tiles (S % bq): forward/dQ rows are independent and
     clipped on write; dK/dV zero q/dout rows and ``p``/``ds`` rows past S
     before the row contraction;
-  * fully-masked rows (``kv_len`` 0, or nothing valid) emit 0 output via
-    the ``max(l, 1e-30)`` clamp — the same convention as the jnp scan —
-    and a ~-1e30 ``lse``, which makes their backward contributions vanish.
+  * fully-masked rows (``kv_len`` 0, nothing valid, or — with segments —
+    a pad row whose segment id appears nowhere in the keys) emit 0 output
+    via the ``max(l, 1e-30)`` clamp — the same convention as the jnp scan
+    — and a ~-1e30 ``lse``, which makes their backward contributions
+    vanish.
 
 Layout: the public entry points take the model's (B, S, H, hd) activation
 layout and transpose to the kernels' (B, H, S, hd) so the sequence tile is
 the sublane dimension (one XLA transpose each way; the grid then indexes
-4-D blocks of shape (1, 1, tile, hd)). ``kv_len`` is a traced SMEM scalar.
+4-D blocks of shape (1, 1, tile, hd)). ``kv_len`` is a traced SMEM scalar;
+segment ids are (B, S, 1)/(B, 1, T) int32 VMEM blocks (a zero-size dummy
+pair keeps the kernel arity fixed when the spec has no segment clause).
 All softmax statistics and accumulators are f32; probability tiles are
 cast to the value dtype for the MXU contraction exactly like the scan.
 """
@@ -66,8 +78,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .mask import MaskSpec, mask_spec
+
 _NEG = -1e30  # finite -inf stand-in: keeps the running max NaN-free when a
 #               tile (or a whole row) is entirely masked
+_SEG_BIG = 2 ** 30  # out-of-bounds stand-in for segment-id min/max ranges
 
 
 def _pick_tiles(S: int, T: int, hd: int, hdv: int, block=None, *,
@@ -98,29 +113,89 @@ def _pick_tiles(S: int, T: int, hd: int, hdv: int, block=None, *,
     return bq, bk
 
 
-def _run_pair(i, j, bq, bk, causal: bool, offset: int, kl):
+def _run_pair(i, j, bq, bk, spec: MaskSpec, kl, qseg, kseg, s_len: int,
+              t_len: int):
     """Traced predicate: does tile pair (i, j) contain any valid position?
 
     False above the rectangular-causal diagonal (the last query row of
     tile i, at global position ``offset + (i+1)*bq - 1``, sits before the
-    first key of tile j) or entirely past the ``kv_len`` fill bound —
-    skipped pairs run no MXU work at all.
+    first key of tile j), entirely past the ``kv_len`` fill bound, or —
+    with segments — when the two tiles' segment-id ranges don't intersect
+    (ids are sorted within a packed row, so range overlap is exact for
+    interior tiles and conservative on remainder tiles). Skipped pairs run
+    no MXU work at all.
     """
     run = j * bk < kl
-    if causal:
-        run &= offset + (i + 1) * bq - 1 >= j * bk
+    if spec.causal:
+        run &= spec.offset + (i + 1) * bq - 1 >= j * bk
+    if spec.has_segments:
+        # lanes past the real bounds hold undefined memory: push them out
+        # of the min/max before reducing so the predicate stays sound
+        qrows = i * bq + jax.lax.broadcasted_iota(jnp.int32, qseg.shape, 0)
+        kcols = j * bk + jax.lax.broadcasted_iota(jnp.int32, kseg.shape, 1)
+        q_lo = jnp.min(jnp.where(qrows < s_len, qseg, _SEG_BIG))
+        q_hi = jnp.max(jnp.where(qrows < s_len, qseg, -_SEG_BIG))
+        k_lo = jnp.min(jnp.where(kcols < t_len, kseg, _SEG_BIG))
+        k_hi = jnp.max(jnp.where(kcols < t_len, kseg, -_SEG_BIG))
+        run &= (q_lo <= k_hi) & (k_lo <= q_hi)
     return run
 
 
-def _masks(i, j, bq, bk, causal: bool, offset: int, kl, s_len: int,
+def _masks(i, j, bq, bk, spec: MaskSpec, kl, qseg, kseg, s_len: int,
            t_len: int):
     """(col validity, row validity) (bq, bk) masks for one score tile."""
     rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     valid = (cols < t_len) & (cols < kl)
-    if causal:
-        valid &= offset + rows >= cols
+    if spec.causal:
+        valid &= spec.offset + rows >= cols
+    if spec.has_segments:
+        valid &= qseg == kseg  # (bq, 1) == (1, bk) -> (bq, bk)
     return valid, rows < s_len
+
+
+def _seg_blocks(spec: MaskSpec, segments, B, S, T, bq, bk, H_or_K, *,
+                dkv: bool = False):
+    """(q_seg array, kv_seg array, q BlockSpec, kv BlockSpec) operand pack.
+
+    Segment ids enter as (B, S)/(B, T) int32 and are viewed as
+    (B, S, 1)/(B, 1, T) so the query tile blocks to (1, bq, 1) — a column
+    the score-tile mask broadcasts against the key tile's (1, 1, bk) row.
+    Without segments a zero-size dummy pair keeps the pallas arity fixed
+    (one int32 element of traffic, no reads).
+    """
+    if dkv:
+        qmap = lambda b, j, g, i: (b // H_or_K, i, 0)
+        kmap = lambda b, j, g, i: (b // H_or_K, 0, j)
+        zmap = lambda b, j, g, i: (0, 0, 0)
+    else:
+        qmap = lambda b, i, j: (b // H_or_K, i, 0)
+        kmap = lambda b, i, j: (b // H_or_K, 0, j)
+        zmap = lambda b, i, j: (0, 0, 0)
+    if not spec.has_segments:
+        dummy = jnp.zeros((1, 1, 1), jnp.int32)
+        return dummy, dummy, pl.BlockSpec((1, 1, 1), zmap), \
+            pl.BlockSpec((1, 1, 1), zmap)
+    q_seg, kv_seg = segments
+    qs = q_seg.astype(jnp.int32).reshape(B, S, 1)
+    ks = kv_seg.astype(jnp.int32).reshape(B, 1, T)
+    return qs, ks, pl.BlockSpec((1, bq, 1), qmap), pl.BlockSpec((1, 1, bk),
+                                                                kmap)
+
+
+def _resolve_spec(spec, S, T, causal, kv_len, segments):
+    # A trivial kv_len operand (the dispatch layer always threads the kl
+    # scalar, defaulting it to T) is fine against has_kv_len=False — the
+    # kernels treat kl as a universal key bound. The other direction, and
+    # any segment mismatch, means the caller built the spec for different
+    # operands.
+    if spec is None:
+        return mask_spec(S, T, causal=causal, kv_len=kv_len,
+                         segments=segments)
+    if (spec.has_kv_len and kv_len is None) or \
+            spec.has_segments != (segments is not None):
+        raise ValueError(f"traced operands do not match {spec}")
+    return spec
 
 
 def _zero_invalid_rows(ref, j, bk, t_len: int):
@@ -145,11 +220,13 @@ def _tdot(a, b):
 # forward: online softmax over kv tiles, carries in VMEM scratch
 # --------------------------------------------------------------------------
 
-def _fwd_kernel(q_ref, k_ref, v_ref, kl_ref, o_ref, lse_ref,
-                m_acc, l_acc, acc, *, scale, causal, offset, bq, bk,
+def _fwd_kernel(q_ref, k_ref, v_ref, kl_ref, qs_ref, ks_ref, o_ref, lse_ref,
+                m_acc, l_acc, acc, *, scale, spec, bq, bk,
                 n_k_tiles, s_len, t_len):
     i, j = pl.program_id(1), pl.program_id(2)
     kl = kl_ref[0, 0]
+    qseg = qs_ref[0] if spec.has_segments else None
+    kseg = ks_ref[0] if spec.has_segments else None
 
     @pl.when(j == 0)
     def _init():
@@ -157,10 +234,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, kl_ref, o_ref, lse_ref,
         l_acc[...] = jnp.zeros_like(l_acc)
         acc[...] = jnp.zeros_like(acc)
 
-    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    @pl.when(_run_pair(i, j, bq, bk, spec, kl, qseg, kseg, s_len, t_len))
     def _compute():
         s = _sdot(q_ref[0, 0], k_ref[0, 0]) * scale
-        valid, _ = _masks(i, j, bq, bk, causal, offset, kl, s_len, t_len)
+        valid, _ = _masks(i, j, bq, bk, spec, kl, qseg, kseg, s_len, t_len)
         s = jnp.where(valid, s, _NEG)
         m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_acc[...] - m_new)
@@ -181,33 +258,38 @@ def _fwd_kernel(q_ref, k_ref, v_ref, kl_ref, o_ref, lse_ref,
 
 
 def mha_fwd(q, k, v, kv_len=None, *, scale: float, causal: bool = True,
-            block=None, interpret: bool = True):
+            segments=None, spec: MaskSpec | None = None, block=None,
+            interpret: bool = True):
     """(out, lse): q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv).
 
     H % K == 0 (kv blocks are indexed by ``q_head // group`` — the repeat
-    is never materialized). ``kv_len`` (traced int, default T) bounds the
-    valid key positions; at this layer it simply intersects whatever
-    causal mask is active (the dispatch entry rejects causal + kv_len —
-    the anchored-at-T causal offset is not the causal-over-fill a caller
-    might expect). Returns out (B, S, H, hdv) in q's dtype and lse
-    (B, H, S) f32 — the combined max+log-sum the backward kernels (and a
-    future cross-shard softmax combine) consume.
+    is never materialized). Masking comes from ``spec`` (built from the
+    ``causal``/``kv_len``/``segments`` operands when not given).
+    ``kv_len`` (traced int, default T) bounds the valid key positions; at
+    this layer it simply intersects whatever causal mask is active (the
+    dispatch entry rejects causal + kv_len — the anchored-at-T causal
+    offset is not the causal-over-fill a caller might expect).
+    ``segments`` is a ((B, S), (B, T)) int32 pair; positions with
+    differing ids never attend. Returns out (B, S, H, hdv) in q's dtype
+    and lse (B, H, S) f32 — the combined max+log-sum the backward kernels
+    (and a future cross-shard softmax combine) consume.
     """
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     G = H // K
-    offset = T - S if causal else 0
+    spec = _resolve_spec(spec, S, T, causal, kv_len, segments)
     bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
     grid = (B * H, pl.cdiv(S, bq), pl.cdiv(T, bk))
     kl = jnp.asarray(T if kv_len is None else kv_len,
                      jnp.int32).reshape(1, 1)
+    qs, ks, qs_spec, ks_spec = _seg_blocks(spec, segments, B, S, T, bq, bk, H)
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out, lse = pl.pallas_call(
-        functools.partial(_fwd_kernel, scale=scale, causal=causal,
-                          offset=offset, bq=bq, bk=bk, n_k_tiles=grid[2],
+        functools.partial(_fwd_kernel, scale=scale, spec=spec,
+                          bq=bq, bk=bk, n_k_tiles=grid[2],
                           s_len=S, t_len=T),
         grid=grid,
         in_specs=[
@@ -216,6 +298,7 @@ def mha_fwd(q, k, v, kv_len=None, *, scale: float, causal: bool = True,
             pl.BlockSpec((1, 1, bk, hdv), lambda bh, i, j: (bh // H, (bh % H) // G, j, 0)),
             pl.BlockSpec((1, 1), lambda bh, i, j: (0, 0),
                          memory_space=pltpu.SMEM),
+            qs_spec, ks_spec,
         ],
         out_specs=[
             pl.BlockSpec((1, 1, bq, hdv), lambda bh, i, j: (bh // H, bh % H, i, 0)),
@@ -227,7 +310,7 @@ def mha_fwd(q, k, v, kv_len=None, *, scale: float, causal: bool = True,
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, hdv), jnp.float32)],
         interpret=interpret,
-    )(qt, kt, vt, kl)
+    )(qt, kt, vt, kl, qs, ks)
     return jnp.swapaxes(out, 1, 2), lse[..., 0]
 
 
@@ -235,20 +318,22 @@ def mha_fwd(q, k, v, kv_len=None, *, scale: float, causal: bool = True,
 # backward dQ: recompute score tiles, dQ accumulator resident per q tile
 # --------------------------------------------------------------------------
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref, dq_ref,
-               acc, *, scale, causal, offset, bq, bk, n_k_tiles, s_len,
-               t_len):
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref, qs_ref,
+               ks_ref, dq_ref, acc, *, scale, spec, bq, bk, n_k_tiles,
+               s_len, t_len):
     i, j = pl.program_id(1), pl.program_id(2)
     kl = kl_ref[0, 0]
+    qseg = qs_ref[0] if spec.has_segments else None
+    kseg = ks_ref[0] if spec.has_segments else None
 
     @pl.when(j == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
 
-    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    @pl.when(_run_pair(i, j, bq, bk, spec, kl, qseg, kseg, s_len, t_len))
     def _compute():
         s = _sdot(q_ref[0, 0], k_ref[0, 0]) * scale
-        valid, _ = _masks(i, j, bq, bk, causal, offset, kl, s_len, t_len)
+        valid, _ = _masks(i, j, bq, bk, spec, kl, qseg, kseg, s_len, t_len)
         p = jnp.where(valid, jnp.exp(s - lse_ref[0, 0]), 0.0)
         v_eff = _zero_invalid_rows(v_ref, j, bk, t_len)
         dp = _sdot(do_ref[0, 0], v_eff)
@@ -263,7 +348,9 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref, dq_ref,
 
 
 def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
-               causal: bool = True, block=None, interpret: bool = True):
+               causal: bool = True, segments=None,
+               spec: MaskSpec | None = None, block=None,
+               interpret: bool = True):
     """dQ (B, S, H, hd) in q's dtype.
 
     ``lse`` (B, H, S) is the forward's log-sum-exp; ``delta`` (B, H, S)
@@ -275,15 +362,16 @@ def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
     T, K = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     G = H // K
-    offset = T - S if causal else 0
+    spec = _resolve_spec(spec, S, T, causal, kv_len, segments)
     bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
     grid = (B * H, pl.cdiv(S, bq), pl.cdiv(T, bk))
     kl = jnp.asarray(T if kv_len is None else kv_len,
                      jnp.int32).reshape(1, 1)
+    qs, ks, qs_spec, ks_spec = _seg_blocks(spec, segments, B, S, T, bq, bk, H)
     row = pl.BlockSpec((1, 1, bq, 1), lambda bh, i, j: (bh // H, bh % H, i, 0))
     dq = pl.pallas_call(
-        functools.partial(_dq_kernel, scale=scale, causal=causal,
-                          offset=offset, bq=bq, bk=bk, n_k_tiles=grid[2],
+        functools.partial(_dq_kernel, scale=scale, spec=spec,
+                          bq=bq, bk=bk, n_k_tiles=grid[2],
                           s_len=S, t_len=T),
         grid=grid,
         in_specs=[
@@ -294,6 +382,7 @@ def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
             row, row,
             pl.BlockSpec((1, 1), lambda bh, i, j: (0, 0),
                          memory_space=pltpu.SMEM),
+            qs_spec, ks_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd),
                                lambda bh, i, j: (bh // H, bh % H, i, 0)),
@@ -301,7 +390,7 @@ def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
         scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
         interpret=interpret,
     )(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
-      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl)
+      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl, qs, ks)
     return jnp.swapaxes(dq, 1, 2)
 
 
@@ -309,18 +398,20 @@ def mha_bwd_dq(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
 # backward dK/dV: kv tile resident while (group x q) tiles stream
 # --------------------------------------------------------------------------
 
-def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref,
-                dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, offset,
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref, qs_ref,
+                ks_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, scale, spec,
                 bq, bk, n_g, n_q_tiles, s_len, t_len):
     j, g, i = pl.program_id(1), pl.program_id(2), pl.program_id(3)
     kl = kl_ref[0, 0]
+    qseg = qs_ref[0] if spec.has_segments else None
+    kseg = ks_ref[0] if spec.has_segments else None
 
     @pl.when((g == 0) & (i == 0))
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    @pl.when(_run_pair(i, j, bq, bk, causal, offset, kl))
+    @pl.when(_run_pair(i, j, bq, bk, spec, kl, qseg, kseg, s_len, t_len))
     def _compute():
         # the q (token) axis is contracted here, so — unlike forward/dQ —
         # undefined remainder *rows* must be zeroed on both operand sides
@@ -331,7 +422,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref,
                                                    do_ref.shape[2:], 0)
         do_eff = jnp.where(dorows < s_len, do_ref[0, 0], 0)
         s = _sdot(q_eff, k_ref[0, 0]) * scale
-        valid, rowmask = _masks(i, j, bq, bk, causal, offset, kl, s_len,
+        valid, rowmask = _masks(i, j, bq, bk, spec, kl, qseg, kseg, s_len,
                                 t_len)
         # rows past S carry undefined lse/delta: fold the row bound into
         # the mask so p/ds are exactly 0 there (0 * NaN would poison the
@@ -351,7 +442,9 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, kl_ref,
 
 
 def mha_bwd_dkv(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
-                causal: bool = True, block=None, interpret: bool = True):
+                causal: bool = True, segments=None,
+                spec: MaskSpec | None = None, block=None,
+                interpret: bool = True):
     """(dK, dV) in kv dtypes, emitted directly in the (B, T, K, hd|hdv)
     storage layout: the grid iterates (kv tiles, group, q tiles) with the
     dK/dV accumulators resident in VMEM, so the GQA reduction over the
@@ -362,17 +455,19 @@ def mha_bwd_dkv(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
     T, K = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     G = H // K
-    offset = T - S if causal else 0
+    spec = _resolve_spec(spec, S, T, causal, kv_len, segments)
     bq, bk = _pick_tiles(S, T, hd, hdv, block, el_bytes=q.dtype.itemsize)
     grid = (B * K, pl.cdiv(T, bk), G, pl.cdiv(S, bq))
     kl = jnp.asarray(T if kv_len is None else kv_len,
                      jnp.int32).reshape(1, 1)
+    qs, ks, qs_spec, ks_spec = _seg_blocks(spec, segments, B, S, T, bq, bk,
+                                           K, dkv=True)
     qmap = lambda bk_, j, g, i: (bk_ // K, (bk_ % K) * G + g, i, 0)
     kvmap = lambda bk_, j, g, i: (bk_ // K, bk_ % K, j, 0)
     row = pl.BlockSpec((1, 1, bq, 1), qmap)
     dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, scale=scale, causal=causal,
-                          offset=offset, bq=bq, bk=bk, n_g=G,
+        functools.partial(_dkv_kernel, scale=scale, spec=spec,
+                          bq=bq, bk=bk, n_g=G,
                           n_q_tiles=grid[3], s_len=S, t_len=T),
         grid=grid,
         in_specs=[
@@ -383,6 +478,7 @@ def mha_bwd_dkv(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
             row, row,
             pl.BlockSpec((1, 1), lambda bk_, j, g, i: (0, 0),
                          memory_space=pltpu.SMEM),
+            qs_spec, ks_spec,
         ],
         out_specs=[pl.BlockSpec((1, 1, bk, hd), kvmap),
                    pl.BlockSpec((1, 1, bk, hdv), kvmap)],
@@ -392,5 +488,5 @@ def mha_bwd_dkv(q, k, v, dout, lse, delta, kv_len=None, *, scale: float,
                         pltpu.VMEM((bk, hdv), jnp.float32)],
         interpret=interpret,
     )(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
-      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl)
+      jnp.swapaxes(dout, 1, 2), lse[..., None], delta[..., None], kl, qs, ks)
     return jnp.swapaxes(dk, 1, 2), jnp.swapaxes(dv, 1, 2)

@@ -1,0 +1,94 @@
+"""Unified attention mask specification.
+
+Before this module, the attention stack threaded three ad-hoc masking
+signals separately through ``models.layers``, the fused kernels and the
+dispatch layer: a ``causal`` flag, the static rectangular offset ``T - S``
+it implies, and a traced ``kv_len`` fill bound. Packed multi-document
+batches add a fourth — per-position segment ids — and rather than a fourth
+parallel plumbing run, every entry point now consumes one
+:class:`MaskSpec`.
+
+The split is **static vs traced**: ``MaskSpec`` holds only hashable Python
+values (it keys ``lru_cache``d dispatch closures and rides through
+``custom_vjp`` nondiff slots), while the traced operands it *describes* —
+the ``kv_len`` scalar and the ``(B, S)``/``(B, T)`` segment-id arrays —
+travel separately alongside q/k/v. ``has_kv_len``/``has_segments`` record
+which traced operands are live so kernels can specialize their tile
+machinery statically.
+
+A position pair (query ``i``, key ``j``) is valid iff ALL live clauses
+hold:
+
+  * ``causal``:   ``offset + i >= j`` (rectangular causal; ``offset`` is
+    ``T - S`` so ``T == S`` is ordinary causal and ``T > S`` a
+    cached-prefill continuation);
+  * ``kv_len``:   ``j < kv_len`` (decode over a partially filled cache);
+  * ``segments``: ``q_seg[b, i] == kv_seg[b, j]`` (no cross-document
+    attention in packed batches; pad positions carry segment id 0 and so
+    form their own island — real tokens never attend pad and vice versa).
+
+``segments`` and ``kv_len`` are mutually exclusive by construction
+(packing is a train-time format, the fill bound a decode-time one);
+:func:`mask_spec` enforces it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class MaskSpec(NamedTuple):
+    """Static (hashable) description of an attention mask.
+
+    ``offset`` is only meaningful when ``causal``; it is pinned to 0
+    otherwise so specs compare/hash canonically.
+    """
+    causal: bool = True
+    offset: int = 0
+    has_kv_len: bool = False
+    has_segments: bool = False
+
+
+def mask_spec(S: int, T: int, *, causal: bool = True, kv_len=None,
+              segments=None) -> MaskSpec:
+    """Canonical :class:`MaskSpec` for a (S query, T key) problem.
+
+    ``kv_len`` / ``segments`` are the *traced* operands (or None); only
+    their presence is recorded. Rejects the two combinations with no
+    coherent semantics: causal with T < S (queries past the key range) and
+    segments together with kv_len (packed train batches have no partial
+    cache fill).
+    """
+    if causal and T < S:
+        raise ValueError(f"causal attention needs T >= S, got S={S} T={T}")
+    if segments is not None and kv_len is not None:
+        raise ValueError("segments and kv_len are mutually exclusive "
+                         "(packed batches have no cache-fill bound)")
+    return MaskSpec(causal=bool(causal), offset=(T - S) if causal else 0,
+                    has_kv_len=kv_len is not None,
+                    has_segments=segments is not None)
+
+
+def mask_array(spec: MaskSpec, S: int, T: int, *, kv_len=None,
+               segments: Optional[Tuple] = None) -> jnp.ndarray:
+    """Dense boolean validity mask for reference/oracle paths.
+
+    Returns ``(1, S, T)`` when the spec has no segment clause (the mask is
+    batch-invariant) and ``(B, S, T)`` with one. Traced operands must be
+    passed iff the spec declares them.
+    """
+    if spec.has_kv_len != (kv_len is not None):
+        raise ValueError("kv_len operand does not match spec.has_kv_len")
+    if spec.has_segments != (segments is not None):
+        raise ValueError("segments operand does not match spec.has_segments")
+    valid = jnp.ones((1, S, T), bool)
+    if spec.causal:
+        qpos = spec.offset + jnp.arange(S)
+        valid &= (qpos[:, None] >= jnp.arange(T)[None, :])[None]
+    if spec.has_kv_len:
+        valid &= (jnp.arange(T) < kv_len)[None, None, :]
+    if spec.has_segments:
+        q_seg, kv_seg = segments
+        valid = valid & (q_seg[:, :, None] == kv_seg[:, None, :])
+    return valid

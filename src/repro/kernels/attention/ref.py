@@ -6,7 +6,9 @@ oracle: the memory-safe jnp fallback for training is the blockwise
 for ``REPRO_FUSED=off``), and the decode-over-cache fallback is
 ``repro.models.layers.chunked_q_attention``.
 
-Masking semantics match the kernels exactly:
+Masking semantics match the kernels exactly (one
+:class:`~repro.kernels.attention.mask.MaskSpec`, densified here via
+:func:`~repro.kernels.attention.mask.mask_array`):
 
   * GQA: kv heads are repeated to the query head count inside (the kernels
     instead index the kv block by ``q_head // group``);
@@ -15,6 +17,8 @@ Masking semantics match the kernels exactly:
     continuation where the query block sits at the end of the key range);
   * ``kv_len`` bounds the valid key positions (decode over a partially
     filled cache);
+  * ``segments`` — a ((B, S), (B, T)) int32 pair — forbids attention
+    across packed-document boundaries (ids must match);
   * fully-masked rows produce **0** output (the flash convention — the
     running normalizer is clamped at 1e-30 — where a naive softmax would
     NaN), via the same finite -inf stand-in the kernels use.
@@ -27,15 +31,17 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
+
+from .mask import mask_array, mask_spec
 
 NEG = -1e30
 
 
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               scale: float, causal: bool = True,
-              kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+              kv_len: Optional[jnp.ndarray] = None,
+              segments=None) -> jnp.ndarray:
     """q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv); H % K == 0."""
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -43,15 +49,12 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
     s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
-    valid = jnp.ones((S, T), bool)
-    if causal:
-        qpos = (T - S) + jnp.arange(S)
-        valid &= qpos[:, None] >= jnp.arange(T)[None, :]
-    if kv_len is not None:
-        valid &= (jnp.arange(T) < kv_len)[None, :]
-    s = jnp.where(valid[None, None], s, NEG)
+    spec = mask_spec(S, T, causal=causal, kv_len=kv_len, segments=segments)
+    valid = mask_array(spec, S, T, kv_len=kv_len, segments=segments)
+    valid = valid[:, None]  # (1|B, 1, S, T) against the (B, H, S, T) scores
+    s = jnp.where(valid, s, NEG)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.where(valid[None, None], jnp.exp(s - m), 0.0)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
     l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhqs,bshd->bqhd", (p / l).astype(v.dtype), v)
     return out.astype(q.dtype)

@@ -29,6 +29,14 @@ Coverage matrix (``supported`` / ``xent_supported``):
                       head at a time — the audio multi-codebook head
                       dispatches per codebook (its 4-D (B, C, S, D) case
                       never reaches dispatch directly).
+  xent, weighted      optional per-token ``weights`` (labels.shape, f32):
+                      zero-weight tokens demote to label -1 before the
+                      kernel (no gradient work), fractional weights scale
+                      loss and grads linearly. Composes *outside* the
+                      custom_vjp, so fused and reference routes stay
+                      weight-oblivious and weighting never changes the
+                      route. Used by packed-document batches, where the
+                      per-token weight doubles as the loss mask.
   xent, transposed w  ``transposed=True``: w is a **tied embedding** in
                       (V, D) storage — blocks index ``w[vocab_tile, d]``,
                       dW is emitted in (V, D) so the gradient lands on the
@@ -50,6 +58,17 @@ Coverage matrix (``supported`` / ``xent_supported``):
                       T (remainder tiles masked via the tile iota).
                       Uncovered: v whose (B, T, K) disagrees with k, and
                       causal T < S.
+  attn, segment mask  packed-document masking: a ((B, S), (B, T)) int32
+                      ``segments`` pair (one :class:`MaskSpec` clause —
+                      see :mod:`repro.kernels.attention.mask`) restricts
+                      every query to keys of its own document; pad id 0
+                      is its own island. Tile pairs whose segment-id
+                      ranges cannot overlap skip their compute like
+                      above-diagonal causal tiles. The shard plan carries
+                      the id arrays batch-sharded alongside q/kv; ids get
+                      float0 cotangents (index data, like kv_len and
+                      xent's labels). Mutually exclusive with ``kv_len``
+                      (packing is a train-time format).
   ==================  =====================================================
 
 Per-optimizer lowering (registry names, via ``core/pipeline.build_pipeline``
@@ -78,6 +97,12 @@ write path (bitwise-equal to update+apply) even when never fused.
                              composition; jnp write path only
   adamw               no     as adam (decoupled weight decay folds into the
                              Adam stage)
+  adams               no     never fused: the synthesized AdamS denominator
+                             (sqrt(b2*m^2 + (1-b2)*g^2)) has no kernel
+                             composition; jnp write path only
+  adapm               yes    as scale with momentum on the embedding and the LM
+                             head (partial momentum); hidden matrices stay
+                             stateless normalize / norm_update
   stable_spam         no     never fused: AdaClip/AdaGN run as the tree-level
                              pre hook; the Adam stage stays jnp
   muon                no     never fused: nesterov EMA + Newton-Schulz
@@ -220,6 +245,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .attention import attention as _ak
+from .attention.mask import MaskSpec, mask_spec
 from .colnorm import colnorm as _ck
 from .colnorm import ref as _cref
 from .colnorm.colnorm import _canon3 as _c3
@@ -836,29 +862,42 @@ def _xent_ref(h, w, labels, *, vocab_size: int, transposed: bool = False):
 
 
 def xent_loss(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray, *,
-              vocab_size: int, mode: str | None = None, h_sharding=None,
-              w_sharding=None, block=None, transposed: bool = False):
+              vocab_size: int, weights=None, mode: str | None = None,
+              h_sharding=None, w_sharding=None, block=None,
+              transposed: bool = False):
     """Fused per-token LM-head cross-entropy (custom_vjp, see module doc).
 
     h (..., D), w (D, V) — or the tied (V, D) embedding with
     ``transposed=True`` — labels h.shape[:-1] int32 (-1 = masked).
     Returns f32 losses of labels.shape; masked tokens are 0 in both the
-    value and the (h, w) gradients. Padded vocab columns (>= vocab_size)
-    never enter the logsumexp. dW always matches w's own layout.
+    value and the (h, w) gradients. ``weights`` (optional, labels.shape,
+    f32) scales each token's loss *and* gradient: zero-weight tokens are
+    additionally masked outright (their labels are demoted to -1 before
+    the kernel, so they cost no gradient work), fractional weights scale
+    linearly. The weighting wraps both routes identically — it composes
+    outside the custom_vjp, so the fused kernels stay weight-oblivious.
+    Padded vocab columns (>= vocab_size) never enter the logsumexp. dW
+    always matches w's own layout.
     """
+    if weights is not None:
+        labels = jnp.where(weights > 0, labels, -1)
     mode = resolve_mode() if mode is None else mode
     route, plan = xent_route(h.shape, w.shape, mode, h_sharding, w_sharding,
                              transposed)
     if route == "ref":
-        return _xent_ref(h, w, labels, vocab_size=vocab_size,
-                         transposed=transposed)
-    return _guarded(
-        "xent_loss",
-        lambda: _xent_fused(vocab_size, use_interpret(mode), plan,
-                            tuple(block) if block is not None else None,
-                            transposed)(h, w, labels),
-        lambda: _xent_ref(h, w, labels, vocab_size=vocab_size,
-                          transposed=transposed))
+        losses = _xent_ref(h, w, labels, vocab_size=vocab_size,
+                           transposed=transposed)
+    else:
+        losses = _guarded(
+            "xent_loss",
+            lambda: _xent_fused(vocab_size, use_interpret(mode), plan,
+                                tuple(block) if block is not None else None,
+                                transposed)(h, w, labels),
+            lambda: _xent_ref(h, w, labels, vocab_size=vocab_size,
+                              transposed=transposed))
+    if weights is not None:
+        losses = losses * weights.astype(losses.dtype)
+    return losses
 
 
 # --------------------------------------------------------------------------
@@ -969,13 +1008,15 @@ def _check_kv_len(causal: bool, kv_len):
             "and silently picking one would differ between routes)")
 
 
-def _attn_ref(q, k, v, *, scale, causal: bool = True, kv_len=None):
+def _attn_ref(q, k, v, *, scale, causal: bool = True, kv_len=None,
+              segments=None):
     """jnp fallback: the layer-level reference implementations.
 
     The blockwise ``lax.scan`` (bitwise pre-kernel path) for plain
-    causal/cross attention; ``chunked_q_attention`` when a ``kv_len``
-    cache bound is involved. GQA kv is repeated here — exactly what the
-    kernels avoid.
+    causal/cross attention — segment-masked through the same scan's
+    ``MaskSpec`` when packed segment ids are live — and
+    ``chunked_q_attention`` when a ``kv_len`` cache bound is involved.
+    GQA kv is repeated here — exactly what the kernels avoid.
     """
     from repro.models import layers as L  # lazy: avoids an import cycle
     _check_kv_len(causal, kv_len)
@@ -987,17 +1028,26 @@ def _attn_ref(q, k, v, *, scale, causal: bool = True, kv_len=None):
     if K != H:
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
+    if segments is not None:
+        spec = mask_spec(q.shape[1], k.shape[1], causal=causal,
+                         segments=segments)
+        block = L.largest_divisor(q.shape[1], 128)
+        return L.masked_flash_attention(q, k, v, segments[0], segments[1],
+                                        block, scale, spec)
     return L.flash_attention(q, k, v, 128, scale, causal)
 
 
 @functools.lru_cache(maxsize=None)
-def _attn_fused(scale: float, causal: bool, interp: bool, plan, block):
+def _attn_fused(scale: float, spec: MaskSpec, interp: bool, plan, block):
     """Build the custom_vjp'd fused attention for one static configuration.
 
-    Cached so repeated traces reuse one custom_vjp object. ``plan`` is an
-    AttnPlan or None; ``block`` a (bq, bk) tuple or None. The traced
-    ``kv_len`` scalar rides along as a custom_vjp argument with a float0
-    cotangent (it is an index bound, like xent's labels).
+    Cached so repeated traces reuse one custom_vjp object. ``spec`` is the
+    (hashable) :class:`MaskSpec`; ``plan`` an AttnPlan or None; ``block``
+    a (bq, bk) tuple or None. The traced mask operands — the ``kv_len``
+    scalar and the (B, S)/(B, T) segment ids — ride along as custom_vjp
+    arguments with float0 cotangents (index data, like xent's labels);
+    when the spec declares no segments the pair is a zero-size dummy the
+    kernels never read.
     """
     mesh = plan.mesh if plan is not None else None
     if plan is not None:
@@ -1005,52 +1055,59 @@ def _attn_fused(scale: float, causal: bool, interp: bool, plan, block):
         hx = tuple(plan.head_axes) or None
         qspec = P(bt, None, hx, None)   # (B, S|T, H|K, hd) operand layout
         lspec = P(bt, hx, None)         # (B, H, S) lse layout
+        sspec = P(bt, None)             # (B, S)/(B, T) segment-id layout
 
-    def _fwd_parts(q, k, v, kl):
-        def body(qb, kb, vb, kl_):
-            return _ak.mha_fwd(qb, kb, vb, kl_, scale=scale, causal=causal,
-                               block=block, interpret=interp)
+    def _segs(qs, ks):
+        return (qs, ks) if spec.has_segments else None
+
+    def _fwd_parts(q, k, v, kl, qs, ks):
+        def body(qb, kb, vb, kl_, qsb, ksb):
+            return _ak.mha_fwd(qb, kb, vb, kl_, scale=scale, spec=spec,
+                               segments=_segs(qsb, ksb), block=block,
+                               interpret=interp)
 
         if plan is None:
-            return body(q, k, v, kl)
+            return body(q, k, v, kl, qs, ks)
         return shard_map(body, mesh=mesh,
-                         in_specs=(qspec, qspec, qspec, P()),
+                         in_specs=(qspec, qspec, qspec, P(), sspec, sspec),
                          out_specs=(qspec, lspec), check_rep=False)(
-                             q, k, v, kl)
+                             q, k, v, kl, qs, ks)
 
-    def _bwd_parts(q, k, v, kl, out, lse, do):
-        def body(qb, kb, vb, kl_, ob, lseb, dob):
+    def _bwd_parts(q, k, v, kl, qs, ks, out, lse, do):
+        def body(qb, kb, vb, kl_, qsb, ksb, ob, lseb, dob):
             delta = jnp.swapaxes(
                 jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32),
                         -1), 1, 2)
+            segs = _segs(qsb, ksb)
             dq = _ak.mha_bwd_dq(qb, kb, vb, dob, lseb, delta, kl_,
-                                scale=scale, causal=causal, block=block,
-                                interpret=interp)
+                                scale=scale, spec=spec, segments=segs,
+                                block=block, interpret=interp)
             dk, dv = _ak.mha_bwd_dkv(qb, kb, vb, dob, lseb, delta, kl_,
-                                     scale=scale, causal=causal,
+                                     scale=scale, spec=spec, segments=segs,
                                      block=block, interpret=interp)
             return dq, dk, dv
 
         if plan is None:
-            return body(q, k, v, kl, out, lse, do)
+            return body(q, k, v, kl, qs, ks, out, lse, do)
         return shard_map(body, mesh=mesh,
-                         in_specs=(qspec, qspec, qspec, P(), qspec, lspec,
-                                   qspec),
+                         in_specs=(qspec, qspec, qspec, P(), sspec, sspec,
+                                   qspec, lspec, qspec),
                          out_specs=(qspec, qspec, qspec),
-                         check_rep=False)(q, k, v, kl, out, lse, do)
+                         check_rep=False)(q, k, v, kl, qs, ks, out, lse, do)
 
     @jax.custom_vjp
-    def fused(q, k, v, kl):
-        return _fwd_parts(q, k, v, kl)[0]
+    def fused(q, k, v, kl, qs, ks):
+        return _fwd_parts(q, k, v, kl, qs, ks)[0]
 
-    def fwd(q, k, v, kl):
-        out, lse = _fwd_parts(q, k, v, kl)
-        return out, (q, k, v, kl, out, lse)
+    def fwd(q, k, v, kl, qs, ks):
+        out, lse = _fwd_parts(q, k, v, kl, qs, ks)
+        return out, (q, k, v, kl, qs, ks, out, lse)
 
     def bwd(res, do):
-        q, k, v, kl, out, lse = res
-        dq, dk, dv = _bwd_parts(q, k, v, kl, out, lse, do)
-        return dq, dk, dv, np.zeros(kl.shape, jax.dtypes.float0)
+        q, k, v, kl, qs, ks, out, lse = res
+        dq, dk, dv = _bwd_parts(q, k, v, kl, qs, ks, out, lse, do)
+        f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+        return dq, dk, dv, f0(kl), f0(qs), f0(ks)
 
     fused.defvjp(fwd, bwd)
     return fused
@@ -1058,32 +1115,44 @@ def _attn_fused(scale: float, causal: bool, interp: bool, plan, block):
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     scale: float, causal: bool = True, kv_len=None,
-                    block=None, q_sharding=None, kv_sharding=None,
-                    mode: str | None = None):
+                    segments=None, block=None, q_sharding=None,
+                    kv_sharding=None, mode: str | None = None):
     """Fused blockwise attention (custom_vjp, see module doc).
 
     q (B, S, H, hd); k (B, T, K, hd), v (B, T, K, hdv) with H % K == 0 —
     the GQA repeat is never materialized (dK/dV come back in kv's own
     (B, T, K, *) layout). ``causal`` masks rectangularly (query i sees
     keys <= T-S+i); ``kv_len`` (traced scalar) bounds the key positions
-    for decode over a partially filled cache. Returns (B, S, H, hdv) in
-    q's dtype. ``kv_len`` is only meaningful without causal masking
-    (causal + kv_len raises — no route implements that combination).
+    for decode over a partially filled cache; ``segments`` — a
+    ((B, S), (B, T)) int32 pair — forbids attention across packed-document
+    boundaries (ids must match; pad id 0 is its own island). Returns
+    (B, S, H, hdv) in q's dtype. ``kv_len`` is only meaningful without
+    causal masking (causal + kv_len raises — no route implements that
+    combination) and mutually exclusive with ``segments`` (packed batches
+    have no cache-fill bound).
     """
     mode = resolve_mode() if mode is None else mode
     _check_kv_len(causal, kv_len)
+    spec = mask_spec(q.shape[1], k.shape[1], causal=causal, kv_len=kv_len,
+                     segments=segments)
     route, plan = attn_route(q.shape, k.shape, causal, mode, q_sharding,
                              kv_sharding)
     if route == "ref" or v.shape[:3] != k.shape[:3]:
-        return _attn_ref(q, k, v, scale=scale, causal=causal, kv_len=kv_len)
+        return _attn_ref(q, k, v, scale=scale, causal=causal, kv_len=kv_len,
+                         segments=segments)
     kl = jnp.asarray(k.shape[1] if kv_len is None else kv_len, jnp.int32)
+    if segments is not None:
+        qs = segments[0].astype(jnp.int32)
+        ks = segments[1].astype(jnp.int32)
+    else:  # fixed custom_vjp arity: zero-size stand-ins, never read
+        qs = ks = jnp.zeros((q.shape[0], 0), jnp.int32)
     return _guarded(
         "flash_attention",
-        lambda: _attn_fused(float(scale), causal, use_interpret(mode), plan,
+        lambda: _attn_fused(float(scale), spec, use_interpret(mode), plan,
                             tuple(block) if block is not None else None)(
-                                q, k, v, kl),
+                                q, k, v, kl, qs, ks),
         lambda: _attn_ref(q, k, v, scale=scale, causal=causal,
-                          kv_len=kv_len))
+                          kv_len=kv_len, segments=segments))
 
 
 # Introspection: op name -> (fused entry point, jnp reference). Tests iterate

@@ -80,6 +80,12 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--pack-documents", dest="pack_documents",
+                    action="store_true",
+                    help="first-fit pack variable-length documents into "
+                         "each (batch, seq) row; batches gain segment_ids "
+                         "/ positions / loss_weights and attention + loss "
+                         "stay within document boundaries")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--dtype", default="")
@@ -148,7 +154,7 @@ def main(argv=None):
             print(f"resumed from step {start_step}")
 
     ds = make_dataset(cfg, seq_len=args.seq, global_batch=args.batch,
-                      seed=args.seed)
+                      seed=args.seed, pack_documents=args.pack_documents)
 
     def make_step(tx):
         return make_train_step(cfg, tx, grad_accum=args.grad_accum,
@@ -173,7 +179,10 @@ def main(argv=None):
 
     t0 = time.time()
     pending = None
+    # packed rows carry fewer real tokens than batch*seq; the loss's token
+    # weight is the honest numerator for tok/s there
     tokens_per_step = args.batch * args.seq
+    eff_tokens = 0.0
     step, done_steps = start_step, 0
     lr_scale, rollbacks = 1.0, 0
     metrics = {"loss": float("nan")}
@@ -210,9 +219,11 @@ def main(argv=None):
                 continue
             step += 1
             done_steps += 1
+            eff_tokens += float(metrics.get("weight", tokens_per_step)) \
+                if args.pack_documents else tokens_per_step
             if step % args.log_every == 0 or done_steps == 1:
                 dt = time.time() - t0
-                tput = tokens_per_step * done_steps / max(dt, 1e-9)
+                tput = eff_tokens / max(dt, 1e-9)
                 line = (f"step {step:6d} loss {float(metrics['loss']):.4f} "
                         f"|g| {float(metrics['grad_norm']):.3f} "
                         f"tok/s {tput:,.0f}")

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.attention.mask import MaskSpec, mask_array, mask_spec
+
 from .config import ModelConfig
 from .sharding import Rules, shard
 
@@ -170,21 +172,44 @@ def _shard_flash(x, axes):
     return shard(x, axes, _FLASH_RULES)
 
 
-def _causal_offset(S: int, T: int, causal: bool) -> int:
-    if causal and T < S:
-        raise ValueError(
-            f"causal flash attention needs T >= S (got S={S}, T={T}): "
-            f"queries past the last key would have no valid positions")
-    return T - S if causal else 0
+_NEG = -1e30  # finite -inf stand-in, same value as the fused kernels':
+#               masked score entries underflow exp() to exactly +0.0, and a
+#               row with no valid position keeps a NaN-free running max
+#               (with -inf masking a fully-masked first tile made
+#               ``exp(m_old - m_new)`` = exp(-inf - -inf) = NaN — reachable
+#               once segment masking can blank a tile below the causal
+#               diagonal)
 
 
-def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
+def _tile_valid(spec: MaskSpec, qs, ks, block: int, q_seg, kv_seg):
+    """Validity mask for one (q, kv) tile pair of the scan.
+
+    Returns None when the spec masks nothing here (the non-causal
+    no-segment path stays mask-free), a (block, block) bool for pure
+    causal, or (B, 1, block, block) once segment ids participate —
+    broadcastable against the (B, H, block, block) score tile either way.
+    """
+    valid = None
+    if spec.causal:
+        qpos = spec.offset + qs + jnp.arange(block)
+        kpos = ks + jnp.arange(block)
+        valid = qpos[:, None] >= kpos[None, :]
+    if spec.has_segments:
+        qsegb = jax.lax.dynamic_slice_in_dim(q_seg, qs, block, 1)
+        ksegb = jax.lax.dynamic_slice_in_dim(kv_seg, ks, block, 1)
+        seg = (qsegb[:, :, None] == ksegb[:, None, :])[:, None]
+        valid = seg if valid is None else valid & seg
+    return valid
+
+
+def _flash_forward(q, k, v, q_seg, kv_seg, block: int, scale: float,
+                   spec: MaskSpec):
     B, S, H, hd = q.shape
     T = k.shape[1]
     hdv = v.shape[-1]
-    offset = _causal_offset(S, T, causal)
+    offset = spec.offset
     block = _pick_block(S, T, block)
-    pairs = _tile_pairs(S // block, T // block, causal, block, offset)
+    pairs = _tile_pairs(S // block, T // block, spec.causal, block, offset)
 
     acc0 = _shard_flash(jnp.zeros((B, S, H, hdv), jnp.float32),
                         ("act_batch", None, "act_heads", None))
@@ -200,16 +225,21 @@ def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
         kb = jax.lax.dynamic_slice_in_dim(k, ks, block, 1)
         vb = jax.lax.dynamic_slice_in_dim(v, ks, block, 1)
         s = jnp.einsum("bqhd,bshd->bhqs", qb, kb).astype(jnp.float32) * scale
-        if causal:
-            qpos = offset + qs + jnp.arange(block)
-            kpos = ks + jnp.arange(block)
-            s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
+        valid = _tile_valid(spec, qs, ks, block, q_seg, kv_seg)
+        if valid is not None:
+            s = jnp.where(valid, s, _NEG)
         accb = jnp.swapaxes(jax.lax.dynamic_slice_in_dim(acc, qs, block, 1), 1, 2)
         mb = jnp.swapaxes(jax.lax.dynamic_slice_in_dim(m, qs, block, 1), 1, 2)
         lb = jnp.swapaxes(jax.lax.dynamic_slice_in_dim(l, qs, block, 1), 1, 2)
         m_new = jnp.maximum(mb, jnp.max(s, axis=-1))
         alpha = jnp.exp(mb - m_new)
-        p = jnp.exp(s - m_new[..., None])
+        # explicit mask on the exp (bitwise = the old -inf masking where
+        # any position is valid: masked entries underflow to +0.0 either
+        # way, and the running max only ever sees real scores)
+        if valid is not None:
+            p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        else:
+            p = jnp.exp(s - m_new[..., None])
         lb = lb * alpha + jnp.sum(p, axis=-1)
         accb = accb * alpha[..., None] + jnp.einsum(
             "bhqs,bshd->bhqd", p.astype(v.dtype),
@@ -229,30 +259,48 @@ def _flash_forward(q, k, v, block: int, scale: float, causal: bool):
     return out, lse
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def masked_flash_attention(q, k, v, q_seg, kv_seg, block: int, scale: float,
+                           spec: MaskSpec):
+    """Memory-O(S*d) blockwise attention under a :class:`MaskSpec`.
+
+    q,k,v (B,S,H,hd) / (B,T,H,hd); ``q_seg``/``kv_seg`` are (B, S)/(B, T)
+    int32 segment ids, read only when ``spec.has_segments`` (pass
+    zero-size (B, 0) arrays otherwise — :func:`flash_attention` does).
+    The spec is a nondiff hashable; segment ids are traced operands whose
+    cotangents are float0. This jnp scan is the bitwise reference path for
+    the fused kernels (see the section comment above).
+    """
+    return _flash_forward(q, k, v, q_seg, kv_seg, block, scale, spec)[0]
+
+
 def flash_attention(q, k, v, block: int, scale: float, causal: bool):
-    """Memory-O(S*d) blockwise attention. q,k,v (B,S,H,hd) / (B,T,H,hd).
+    """Blockwise attention with only the causal clause (pre-packing API).
 
     ``causal`` masks rectangularly when T > S (query ``i`` sees keys
     ``j <= (T - S) + i`` — a cached-prefill continuation); T == S is
-    ordinary causal. This jnp scan is the bitwise reference path for the
-    fused kernels (see the section comment above).
+    ordinary causal. Thin wrapper: builds the equivalent
+    :class:`MaskSpec` and runs :func:`masked_flash_attention` with no
+    segment operands — bitwise the pre-MaskSpec scan.
     """
-    return _flash_forward(q, k, v, block, scale, causal)[0]
+    spec = mask_spec(q.shape[1], k.shape[1], causal=causal)
+    z = jnp.zeros((q.shape[0], 0), jnp.int32)
+    return masked_flash_attention(q, k, v, z, z, block, scale, spec)
 
 
-def _flash_fwd_rule(q, k, v, block, scale, causal):
-    out, lse = _flash_forward(q, k, v, block, scale, causal)
-    return out, (q, k, v, out, lse)
+def _flash_fwd_rule(q, k, v, q_seg, kv_seg, block, scale, spec):
+    out, lse = _flash_forward(q, k, v, q_seg, kv_seg, block, scale, spec)
+    return out, (q, k, v, q_seg, kv_seg, out, lse)
 
 
-def _flash_bwd_rule(block, scale, causal, res, dout):
-    q, k, v, out, lse = res
+def _flash_bwd_rule(block, scale, spec, res, dout):
+    q, k, v, q_seg, kv_seg, out, lse = res
     B, S, H, hd = q.shape
     T = k.shape[1]
-    offset = _causal_offset(S, T, causal)
+    offset = spec.offset
     block_ = _pick_block(S, T, block)
-    pairs = _tile_pairs(S // block_, T // block_, causal, block_, offset)
+    pairs = _tile_pairs(S // block_, T // block_, spec.causal, block_,
+                        offset)
     # D_i = sum_d dout_i * out_i  (B,S,H)
     Dsum = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
 
@@ -275,11 +323,13 @@ def _flash_bwd_rule(block, scale, causal, res, dout):
         Db = jnp.swapaxes(
             jax.lax.dynamic_slice_in_dim(Dsum, qs, block_, 1), 1, 2)
         s = jnp.einsum("bqhd,bshd->bhqs", qb, kb).astype(jnp.float32) * scale
-        if causal:
-            qpos = offset + qs + jnp.arange(block_)
-            kpos = ks + jnp.arange(block_)
-            s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
-        p = jnp.exp(s - lseb[..., None])                     # (B,H,q,s)
+        valid = _tile_valid(spec, qs, ks, block_, q_seg, kv_seg)
+        if valid is not None:
+            # explicit zero (not exp of a masked score): a fully-masked
+            # row's lse is ~_NEG and exp(_NEG - lse) would be exp(~0) = 1
+            p = jnp.where(valid, jnp.exp(s - lseb[..., None]), 0.0)
+        else:
+            p = jnp.exp(s - lseb[..., None])                 # (B,H,q,s)
         pb = p.astype(v.dtype)
         dvb = jnp.einsum("bhqs,bqhd->bshd", pb, dob)
         dp = jnp.einsum("bqhd,bshd->bhqs", dob, vb).astype(jnp.float32)
@@ -299,14 +349,20 @@ def _flash_bwd_rule(block, scale, causal, res, dout):
         return (dq, dk, dv), None
 
     (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), jnp.asarray(pairs))
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            _int_cotangent(q_seg), _int_cotangent(kv_seg))
 
 
-flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+def _int_cotangent(x):
+    """float0 cotangent for an integer operand (segment ids)."""
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+masked_flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
 def _route_attention(q, k, v, scale: float, *, causal: bool, kv_len=None,
-                     rules: Optional[Rules] = None, mesh=None,
+                     segments=None, rules: Optional[Rules] = None, mesh=None,
                      kv_axes=("act_batch", None, "act_heads", None)):
     """Fused-kernel route for one attention call (None -> caller's jnp path).
 
@@ -327,13 +383,13 @@ def _route_attention(q, k, v, scale: float, *, causal: bool, kv_len=None,
     if route != "kernel" or v.shape[:3] != k.shape[:3]:
         return None
     return _kd.flash_attention(q, k, v, scale=scale, causal=causal,
-                               kv_len=kv_len, q_sharding=q_sh,
-                               kv_sharding=kv_sh, mode=mode)
+                               kv_len=kv_len, segments=segments,
+                               q_sharding=q_sh, kv_sharding=kv_sh, mode=mode)
 
 
 def causal_blockwise_attention(q, k, v, block: int, scale: float, *,
-                               rules: Optional[Rules] = None,
-                               mesh=None) -> jnp.ndarray:
+                               rules: Optional[Rules] = None, mesh=None,
+                               segments=None) -> jnp.ndarray:
     """Causal flash attention; kv may have fewer heads (GQA).
 
     Fused route (default where covered): the Pallas kernels behind
@@ -342,32 +398,29 @@ def causal_blockwise_attention(q, k, v, block: int, scale: float, *,
     the kernels shard_map over the activation batch/head axes. Reference
     route (``REPRO_FUSED=off`` / uncovered): repeat kv to full heads (so
     the head axis TP-shards cleanly) and run the jnp scan — the bitwise
-    pre-kernel path.
+    pre-kernel path. ``segments`` — a ((B, S), (B, T)) int32 pair —
+    additionally forbids attention across packed-document boundaries.
     """
-    out = _route_attention(q, k, v, scale, causal=True, rules=rules,
-                           mesh=mesh)
-    if out is not None:
-        return out
-    H, K = q.shape[2], k.shape[2]
-    if K != H:
-        k = jnp.repeat(k, H // K, axis=2)
-        v = jnp.repeat(v, H // K, axis=2)
-        if rules is not None:
-            k = shard(k, ("act_batch", None, "act_heads", None), rules)
-            v = shard(v, ("act_batch", None, "act_heads", None), rules)
-    return flash_attention(q, k, v, block, scale, True)
+    return _blockwise_attention(q, k, v, block, scale, causal=True,
+                                rules=rules, mesh=mesh, segments=segments)
 
 
 def cross_blockwise_attention(q, k, v, block: int, scale: float, *,
-                              rules: Optional[Rules] = None,
-                              mesh=None) -> jnp.ndarray:
+                              rules: Optional[Rules] = None, mesh=None,
+                              segments=None) -> jnp.ndarray:
     """Non-causal flash attention (cross-attention over image tokens).
 
     Routed like :func:`causal_blockwise_attention` (kernels where
     covered, repeated-kv jnp scan otherwise).
     """
-    out = _route_attention(q, k, v, scale, causal=False, rules=rules,
-                           mesh=mesh)
+    return _blockwise_attention(q, k, v, block, scale, causal=False,
+                                rules=rules, mesh=mesh, segments=segments)
+
+
+def _blockwise_attention(q, k, v, block, scale, *, causal, rules, mesh,
+                         segments):
+    out = _route_attention(q, k, v, scale, causal=causal, segments=segments,
+                           rules=rules, mesh=mesh)
     if out is not None:
         return out
     H, K = q.shape[2], k.shape[2]
@@ -377,7 +430,12 @@ def cross_blockwise_attention(q, k, v, block: int, scale: float, *,
         if rules is not None:
             k = shard(k, ("act_batch", None, "act_heads", None), rules)
             v = shard(v, ("act_batch", None, "act_heads", None), rules)
-    return flash_attention(q, k, v, block, scale, False)
+    if segments is not None:
+        spec = mask_spec(q.shape[1], k.shape[1], causal=causal,
+                         segments=segments)
+        return masked_flash_attention(q, k, v, segments[0], segments[1],
+                                      block, scale, spec)
+    return flash_attention(q, k, v, block, scale, causal)
 
 
 def decode_attention(q, k, v, q_block: int, scale: float, kv_len=None, *,
@@ -405,7 +463,11 @@ def chunked_q_attention(q, k, v, q_block: int, scale: float,
                         kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Non-causal attention chunked over q (cross-attn / decode-over-cache).
 
-    q (B,S,H,hd); k,v (B,T,K,hd). ``kv_len`` masks positions >= kv_len.
+    q (B,S,H,hd); k,v (B,T,K,hd). ``kv_len`` masks positions >= kv_len —
+    densified through the shared :func:`~repro.kernels.attention.mask
+    .mask_array` so decode consumes the same MaskSpec clause as the
+    kernels (decode serves one document per row, so the segment clause is
+    never live here — ``mask_spec`` rejects segments + kv_len outright).
     """
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -415,9 +477,12 @@ def chunked_q_attention(q, k, v, q_block: int, scale: float,
     nq = S // q_block
     qg = q.reshape(B, nq, q_block, K, G, hd)
 
+    spec = mask_spec(S, T, causal=False, kv_len=kv_len)
     kmask = None
-    if kv_len is not None:
-        kmask = jnp.arange(T) < kv_len  # (T,)
+    if spec.has_kv_len:
+        # (T,) row of the dense (1, S, T) mask: non-causal + kv_len is
+        # query-invariant, bitwise what `arange(T) < kv_len` produced
+        kmask = mask_array(spec, 1, T, kv_len=kv_len)[0, 0]
 
     def one(qb):  # (B,b,K,G,hd)
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k).astype(jnp.float32) * scale
@@ -452,13 +517,16 @@ def attn_spec(cfg: ModelConfig, cross: bool = False) -> dict:
 def apply_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
                     mode: str = "train", cache: Optional[dict] = None,
                     cache_index=None, kv_source: Optional[jnp.ndarray] = None,
-                    causal: bool = True, mesh=None):
+                    causal: bool = True, mesh=None, segment_ids=None):
     """GQA self-attention (or cross-attention when ``kv_source`` is given).
 
     mode: train | prefill | decode. Returns (y, new_cache). ``mesh``
     (threaded from the trainer/serving factories, feature-detected like
     the loss's) lets the fused attention kernels shard_map over the
-    activation batch/head axes.
+    activation batch/head axes. ``segment_ids`` (B, S) int32 masks
+    attention to within-document positions for packed batches (self-
+    attention only: cross-attention keys are not packed, and decode
+    serves one document per row).
     """
     B, S, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -510,7 +578,11 @@ def apply_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
         # head axis TP-shards cleanly) lives inside the wrappers
         fn = (causal_blockwise_attention if kv_source is None
               else cross_blockwise_attention)
-        out = fn(q, k, v, cfg.attn_kv_block, scale, rules=rules, mesh=mesh)
+        seg = None
+        if segment_ids is not None and kv_source is None:
+            seg = (segment_ids, segment_ids)
+        out = fn(q, k, v, cfg.attn_kv_block, scale, rules=rules, mesh=mesh,
+                 segments=seg)
 
     out = out.reshape(B, S, H * hd)
     y = out @ p["wo"]
@@ -536,7 +608,7 @@ def mla_spec(cfg: ModelConfig) -> dict:
 
 def apply_mla_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
                         mode: str = "train", cache=None, cache_index=None,
-                        mesh=None):
+                        mesh=None, segment_ids=None):
     """Multi-head Latent Attention (DeepSeek-V2/V3).
 
     Caches only the compressed kv latent (kv_lora_rank) + shared rope key —
@@ -599,9 +671,11 @@ def apply_mla_attention(p, cfg: ModelConfig, x, positions, rules: Rules,
         vv = shard(vv, ("act_batch", None, "act_heads", None), rules)
         # full-head (H == K) causal attention; the kernel route also
         # covers MLA's asymmetric head dims (qk qn+qr vs value vd)
+        seg = None if segment_ids is None else (segment_ids, segment_ids)
         out = causal_blockwise_attention(q_full, k_full, vv,
                                          cfg.attn_kv_block, scale,
-                                         rules=rules, mesh=mesh)
+                                         rules=rules, mesh=mesh,
+                                         segments=seg)
     y = out.reshape(B, S, H * vd) @ p["wo"]
     return shard(y, ("act_batch", "act_seq", "act_embed"), rules), new_cache
 

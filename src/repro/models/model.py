@@ -139,12 +139,18 @@ def cache_logical_axes(cfg: ModelConfig) -> dict:
 
 def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
             mode: str = "train", cache=None, cache_index=None,
-            rules: Optional[Rules] = None, mesh=None):
+            rules: Optional[Rules] = None, mesh=None, positions=None,
+            segment_ids=None):
     """Run the backbone. Returns (hidden, new_cache, aux_loss).
 
     ``mesh`` (optional, threaded from the trainer/serving factories the
     same way ``loss_fn`` receives it) reaches the attention layers so the
     fused flash kernels can shard_map over the batch/head mesh axes.
+    ``positions``/``segment_ids`` (both (B, S) int32, optional) are the
+    packed-document operands: within-document positions (RoPE/learned
+    positions restart at every document boundary) and the per-token
+    document ids the attention mask keeps separated (pad id 0). When
+    ``positions`` is None the usual 0..S-1 (or cache-offset) ramp is used.
     """
     rules = rules or Rules(cfg.rule_overrides)
     ew = params["tok_embed"]["w"]
@@ -157,10 +163,11 @@ def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
     x = shard(x, ("act_batch", "act_seq", "act_embed"), rules)
 
     S = x.shape[1]
-    if mode == "decode":
-        positions = cache_index + jnp.arange(S)
-    else:
-        positions = jnp.arange(S)
+    if positions is None:
+        if mode == "decode":
+            positions = cache_index + jnp.arange(S)
+        else:
+            positions = jnp.arange(S)
     if cfg.pos_embed == "learned":
         x = x + jnp.take(params["pos_embed"]["w"], positions, axis=0)
 
@@ -171,7 +178,8 @@ def forward(params, cfg: ModelConfig, tokens, *, image_embeds=None,
         seg_cache = cache[name] if cache is not None else None
         x, seg_cache, seg_aux = T.apply_segment(
             kind, n, cfg, params["segments"][name], x, positions, rules,
-            mode, seg_cache, cache_index, image_embeds, mesh=mesh)
+            mode, seg_cache, cache_index, image_embeds, mesh=mesh,
+            segment_ids=segment_ids)
         if new_cache is not None:
             new_cache[name] = seg_cache
         aux = aux + seg_aux
@@ -238,8 +246,15 @@ def _pick_chunk(S: int, target: int) -> int:
     return best
 
 
-def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules):
-    """h (B,c,D), w (D,V), labels (B,c) -> (sum_loss, sum_weight)."""
+def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules,
+                weights_chunk=None):
+    """h (B,c,D), w (D,V), labels (B,c) -> (sum_loss, sum_weight).
+
+    ``weights_chunk`` (optional, (B,c) f32) scales each token's loss; the
+    effective weight is 0 wherever the label is masked (-1) *or* the
+    weight is 0 — the returned sum_weight counts exactly the tokens that
+    contributed, so the caller's mean divides by the right denominator.
+    """
     logits = (h_chunk @ w).astype(jnp.float32)
     logits = _mask_pad_vocab(logits, cfg)
     logits = shard(logits, ("act_batch", "act_seq", "act_vocab"), rules)
@@ -247,11 +262,13 @@ def _xent_chunk(h_chunk, w, labels_chunk, cfg: ModelConfig, rules: Rules):
     lab = jnp.clip(labels_chunk, 0)
     ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
     weight = (labels_chunk >= 0).astype(jnp.float32)
+    if weights_chunk is not None:
+        weight = weight * weights_chunk.astype(jnp.float32)
     return jnp.sum((lse - ll) * weight), jnp.sum(weight)
 
 
 def lm_loss(params, cfg: ModelConfig, hidden, labels,
-            rules: Optional[Rules] = None, mesh=None):
+            rules: Optional[Rules] = None, mesh=None, weights=None):
     """Cross-entropy over the LM head without full-sequence logits.
 
     Two implementations, selected by ``repro.kernels.dispatch.xent_route``:
@@ -268,6 +285,12 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
       logit blocks per scan step, bitwise-stable across PRs.
 
     labels: (B,S) int32, -1 = masked; audio: (B, n_codebooks, S).
+    ``weights`` (optional, (B,S) f32 — packed-document loss weights)
+    scales each token's loss; the mean divides by the summed *effective*
+    weight, counting only tokens with label >= 0 AND weight > 0 (an
+    all-masked batch returns loss 0, not a division by a clamped fake
+    denominator — see the weight handling below). Audio heads do not take
+    weights (packing is a text-family format).
     Returns (mean_loss, total_weight).
 
     Tied heads (``cfg.tie_embeddings``): ``w`` is the (V, D) embedding; the
@@ -278,6 +301,9 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
     physical axes as the untied head's ("embed", "vocab"), swapped.
     """
     rules = rules or Rules(cfg.rule_overrides)
+    if weights is not None and cfg.family == "audio":
+        raise ValueError("lm_loss: per-token weights are not supported for "
+                         "the audio multi-codebook head")
     w, tied = head_weight(params, cfg)
     B, S = hidden.shape[0], hidden.shape[1]
 
@@ -295,22 +321,32 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
     route, _ = _kd.xent_route(hidden.shape, head_shape, mode,
                               h_sharding=h_sh, w_sharding=w_sh,
                               transposed=tied)
+    # mean = sum / effective weight; a zero effective weight (all tokens
+    # masked) yields loss 0 via a neutral denominator — NOT max(ws, 1),
+    # which silently deflated fractional-weight sums in (0, 1)
+    _mean = lambda ls, ws: ls / jnp.where(ws > 0, ws, 1.0)
+
     if route == "kernel":
         def head_loss_sums(wh, labs):
             losses = _kd.xent_loss(hidden, wh, labs,
                                    vocab_size=cfg.vocab_size, mode=mode,
+                                   weights=weights,
                                    h_sharding=h_sh, w_sharding=w_sh,
                                    transposed=tied)
-            return jnp.sum(losses), jnp.sum((labs >= 0).astype(jnp.float32))
+            if weights is not None:
+                ws = jnp.sum(jnp.where(labs >= 0, weights, 0.0))
+            else:
+                ws = jnp.sum((labs >= 0).astype(jnp.float32))
+            return jnp.sum(losses), ws
 
         if cfg.family == "audio":
             tot_l = tot_w = 0.0
             for c in range(cfg.n_codebooks):
                 ls, ws = head_loss_sums(w[c], labels[:, c])
                 tot_l, tot_w = tot_l + ls, tot_w + ws
-            return tot_l / jnp.maximum(tot_w, 1.0), tot_w
+            return _mean(tot_l, tot_w), tot_w
         ls, ws = head_loss_sums(w, labels)
-        return ls / jnp.maximum(ws, 1.0), ws
+        return _mean(ls, ws), ws
 
     chunk = _pick_chunk(S, cfg.loss_chunk)
     nch = S // chunk
@@ -325,7 +361,9 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
             s0 = i * chunk
             h_c = jax.lax.dynamic_slice_in_dim(hidden, s0, chunk, 1)
             l_c = jax.lax.dynamic_slice_in_dim(labs, s0, chunk, 1)
-            ls, ws = _xent_chunk(h_c, wh, l_c, cfg, rules)
+            w_c = None if weights is None else \
+                jax.lax.dynamic_slice_in_dim(weights, s0, chunk, 1)
+            ls, ws = _xent_chunk(h_c, wh, l_c, cfg, rules, weights_chunk=w_c)
             return (carry[0] + ls, carry[1] + ws), None
 
         (ls, ws), _ = jax.lax.scan(
@@ -338,23 +376,29 @@ def lm_loss(params, cfg: ModelConfig, hidden, labels,
         for c in range(cfg.n_codebooks):
             ls, ws = per_head(w[c], labels[:, c])
             tot_l, tot_w = tot_l + ls, tot_w + ws
-        return tot_l / jnp.maximum(tot_w, 1.0), tot_w
+        return _mean(tot_l, tot_w), tot_w
     ls, ws = per_head(w, labels)
-    return ls / jnp.maximum(ws, 1.0), ws
+    return _mean(ls, ws), ws
 
 
 def loss_fn(params, cfg: ModelConfig, batch: dict, aux_coef: float = 0.01,
             rules: Optional[Rules] = None, mesh=None):
-    """Full training loss. batch: tokens, labels, [image_embeds].
+    """Full training loss. batch: tokens, labels, [image_embeds],
+    [positions, segment_ids, loss_weights] (packed-document batches).
 
     ``mesh`` is forwarded to :func:`lm_loss` for the mesh-aware fused
     cross-entropy AND to :func:`forward` for the mesh-aware fused
-    attention; callers (the trainer) feature-detect this kwarg.
+    attention; callers (the trainer) feature-detect this kwarg. Packed
+    batches (``data.pipeline`` with ``pack_documents``) carry
+    within-document positions, the segment ids the attention mask keeps
+    separated, and per-token loss weights — all picked up here by key.
     """
     hidden, _, aux = forward(params, cfg, batch["tokens"],
                              image_embeds=batch.get("image_embeds"),
-                             mode="train", rules=rules, mesh=mesh)
+                             mode="train", rules=rules, mesh=mesh,
+                             positions=batch.get("positions"),
+                             segment_ids=batch.get("segment_ids"))
     loss, weight = lm_loss(params, cfg, hidden, batch["labels"], rules=rules,
-                           mesh=mesh)
+                           mesh=mesh, weights=batch.get("loss_weights"))
     total = loss + aux_coef * aux
     return total, {"loss": loss, "aux": aux, "weight": weight}

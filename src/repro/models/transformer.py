@@ -43,12 +43,17 @@ def _sub_spec(cfg: ModelConfig, sub: str) -> dict:
 
 
 def _apply_sub(sub: str, p: dict, cfg: ModelConfig, x, positions, rules: Rules,
-               mode: str, cache, cache_index, image_embeds, mesh=None):
+               mode: str, cache, cache_index, image_embeds, mesh=None,
+               segment_ids=None):
     """Pre-norm residual sub-layer. Returns (x, new_cache, aux).
 
     ``mesh`` rides along to the attention layers so the fused flash
     kernels can shard_map over the activation batch/head axes (the same
     feature-detected plumbing the fused LM-head loss uses).
+    ``segment_ids`` (B, S) int32 — packed-document ids, consumed by the
+    *self*-attention subs only (cross-attention keys are not packed and
+    mamba's sequence mixing has no segment mask — packed batches are an
+    attention-family format).
     """
     h = L.rmsnorm(x, p["norm"], cfg.rms_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -56,11 +61,13 @@ def _apply_sub(sub: str, p: dict, cfg: ModelConfig, x, positions, rules: Rules,
         if cfg.attention_kind == "mla":
             y, cache = L.apply_mla_attention(p, cfg, h, positions, rules,
                                              mode, cache, cache_index,
-                                             mesh=mesh)
+                                             mesh=mesh,
+                                             segment_ids=segment_ids)
         else:
             y, cache = L.apply_attention(p, cfg, h, positions, rules,
                                          mode, cache, cache_index,
-                                         mesh=mesh)
+                                         mesh=mesh,
+                                         segment_ids=segment_ids)
     elif sub == "cross":
         y, _ = L.apply_attention(p, cfg, h, positions, rules, mode="train",
                                  kv_source=image_embeds, causal=False,
@@ -151,14 +158,15 @@ def cache_axes(cfg: ModelConfig, kind: str) -> dict:
 
 def apply_superblock(kind: str, cfg: ModelConfig, params: dict, x, positions,
                      rules: Rules, mode: str, cache: Optional[dict],
-                     cache_index, image_embeds, mesh=None):
+                     cache_index, image_embeds, mesh=None, segment_ids=None):
     new_cache = dict(cache) if cache is not None else None
     aux_total = jnp.zeros((), jnp.float32)
     for name, sub in superblock_layout(cfg, kind):
         sub_cache = cache.get(name) if (cache is not None and _needs_cache(sub)) else None
         x, sub_cache, aux = _apply_sub(sub, params[name], cfg, x, positions,
                                        rules, mode, sub_cache, cache_index,
-                                       image_embeds, mesh=mesh)
+                                       image_embeds, mesh=mesh,
+                                       segment_ids=segment_ids)
         if new_cache is not None and _needs_cache(sub) and sub_cache is not None:
             new_cache[name] = sub_cache
         aux_total = aux_total + aux
@@ -179,13 +187,19 @@ def _remat_policy(cfg: ModelConfig):
 
 def apply_segment(kind: str, n_blocks: int, cfg: ModelConfig, stacked: dict,
                   x, positions, rules: Rules, mode: str, cache, cache_index,
-                  image_embeds, mesh=None):
-    """Scan ``n_blocks`` super-blocks with stacked params (+ stacked cache)."""
+                  image_embeds, mesh=None, segment_ids=None):
+    """Scan ``n_blocks`` super-blocks with stacked params (+ stacked cache).
+
+    ``segment_ids`` (packed-document masking) is closed over, not scanned:
+    it is the same (B, S) operand for every block. (Not to be confused
+    with the layer-group "segments" this function scans over.)
+    """
 
     def block(x, inputs):
         p, c = inputs
         x, c, aux = apply_superblock(kind, cfg, p, x, positions, rules, mode,
-                                     c, cache_index, image_embeds, mesh=mesh)
+                                     c, cache_index, image_embeds, mesh=mesh,
+                                     segment_ids=segment_ids)
         return x, (c, aux)
 
     policy = _remat_policy(cfg)
@@ -202,7 +216,8 @@ def apply_segment(kind: str, n_blocks: int, cfg: ModelConfig, stacked: dict,
             p, _ = inputs
             x, _, aux = apply_superblock(kind, cfg, p, x, positions, rules,
                                          mode, None, cache_index,
-                                         image_embeds, mesh=mesh)
+                                         image_embeds, mesh=mesh,
+                                         segment_ids=segment_ids)
             return x, aux
 
         body = jax.checkpoint(block_nc, policy=policy, prevent_cse=False) \

@@ -48,6 +48,12 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                     faults=None):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
+    Batches are passed to the loss whole: packed-document batches
+    (``data.pipeline`` with ``pack_documents``) simply carry their extra
+    per-token leaves — ``segment_ids``, ``positions``, ``loss_weights`` —
+    through the same dict; the microbatch reshape below tree_maps over
+    every leaf, so packing and grad accumulation compose.
+
     ``grad_accum > 1`` splits the batch into microbatches along axis 0 and
     accumulates gradients via ``lax.scan`` (bounded activation memory, the
     standard large-scale recipe); per-microbatch auxiliary metrics (MoE

@@ -160,6 +160,67 @@ def run(x, m, bm):
     assert kernel_contract.analyze_source("fixture.py", src) == []
 
 
+# The segment-id mask shape PR 9's packed attention kernels use: the score
+# tile's validity ANDs the iota remainder/causal bounds with a segment-id
+# equality ((bq, 1) == (1, bk)) read from dedicated operand refs.
+_SEG_KERNEL_TEMPLATE = '''
+import functools
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masks(i, j, bq, bk, kl, qseg, kseg):
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = {valid_expr}
+    valid &= qseg == kseg
+    return valid
+
+
+def _kernel(q_ref, k_ref, v_ref, qs_ref, ks_ref, o_ref, *, bq, bk, kl):
+    i, j = pl.program_id(0), pl.program_id(1)
+    s = jnp.dot(q_ref[...], k_ref[...])
+    valid = _masks(i, j, bq, bk, kl, qs_ref[...], ks_ref[...])
+    s = jnp.where(valid, s, -1e30)
+    p = jnp.where(valid, jnp.exp(s), 0.0)
+    o_ref[...] = jnp.dot(p, v_ref[...])
+
+
+def run(q, k, v, qs, ks, kl):
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=8, bk=8, kl=kl),
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+                  pl.BlockSpec((8, 8), lambda i, j: (0, j)),
+                  pl.BlockSpec((8, 8), lambda i, j: (j, 0)),
+                  pl.BlockSpec((8, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, 8), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+    )(q, k, v, qs, ks)
+'''
+
+SEGMENT_KERNEL_CLEAN = _SEG_KERNEL_TEMPLATE.format(
+    valid_expr="(cols < kl) & (rows >= cols)")
+# segment equality ALONE: remainder lanes of a ragged tile are never
+# bounded by the tile iota, so undefined memory still reaches both dots
+SEGMENT_KERNEL_SEG_ONLY = _SEG_KERNEL_TEMPLATE.format(
+    valid_expr="jnp.full((bq, bk), True)")
+
+
+def test_kc_segment_mask_with_iota_bound_is_clean():
+    assert kernel_contract.analyze_source(
+        "fixture.py", SEGMENT_KERNEL_CLEAN) == []
+
+
+def test_kc_segment_equality_alone_is_not_a_remainder_mask():
+    found = kernel_contract.analyze_source("fixture.py",
+                                           SEGMENT_KERNEL_SEG_ONLY)
+    assert rules(found) == {"KC003"}
+    # both the score dot and the p @ v contraction are unprotected
+    assert sum(f.rule == "KC003" for f in found) == 2
+
+
 # --------------------------------------------------------------------------
 # collective-axes (CX)
 # --------------------------------------------------------------------------

@@ -338,7 +338,8 @@ def test_registry_exposes_specs():
     from repro.core import OPTIMIZER_REGISTRY
     assert tuple(OPTIMIZER_REGISTRY) == OPTIMIZER_NAMES
     fused = {n for n, s in OPTIMIZER_REGISTRY.items() if s.fused}
-    assert fused == {"scale", "scale_fused", "sgd_colnorm", "sgd_rownorm"}
+    assert fused == {"scale", "scale_fused", "adapm", "sgd_colnorm",
+                     "sgd_rownorm"}
     assert "momentum" in OPTIMIZER_REGISTRY["sgd_momentum"].valid_kwargs()
     assert OPTIMIZER_REGISTRY["adamw"].defaults == {"weight_decay": 0.01}
 
@@ -440,3 +441,52 @@ def test_momentum_dtype_rejects_unknown_across_zoo(name):
     fn = {"adam": adam, "muon": muon, "normalized_sgd": normalized_sgd}[name]
     with pytest.raises(ValueError, match="momentum_dtype"):
         fn(1e-3, momentum_dtype="fp8")
+
+
+def test_adams_matches_reference_and_keeps_sgdm_state():
+    """AdamS: denom is synthesized from (m, g) each step — no nu buffer."""
+    from repro.core import make_optimizer
+    params = make_params()
+    grads = make_grads(params)
+    b1, b2, eps, lr, wd = 0.9, 0.999, 1e-8, 1e-2, 0.1
+    tx = make_optimizer("adams", lr, b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    s = tx.init(params)
+    # SGDM-sized: first moment allocated everywhere, second moment nowhere
+    for l in jax.tree_util.tree_leaves(s.nu):
+        assert l.size == 0
+    for m, p in zip(jax.tree_util.tree_leaves(s.mu),
+                    jax.tree_util.tree_leaves(params)):
+        assert m.shape == p.shape
+
+    m_ref = jax.tree_util.tree_map(lambda p: np.zeros(p.shape, np.float32),
+                                   params)
+    for t in range(3):
+        upd, s = tx.update(grads, s, params)
+        for path in (("tok_embed", "w"), ("lm_head", "w"), ("bias", "b")):
+            g = np.asarray(grads[path[0]][path[1]], np.float32)
+            p = np.asarray(params[path[0]][path[1]], np.float32)
+            m = m_ref[path[0]][path[1]]
+            m[...] = b1 * m + (1 - b1) * g
+            mh = m / (1 - b1 ** (t + 1))
+            den = np.sqrt(b2 * mh ** 2 + (1 - b2) * g ** 2) + eps
+            np.testing.assert_allclose(
+                np.asarray(upd[path[0]][path[1]]),
+                -lr * (mh / den + wd * p), rtol=1e-6, atol=1e-7)
+
+
+def test_adapm_is_scale_with_embedding_momentum():
+    """AdaPM = SCALE's plan with momentum on first AND last groups."""
+    from repro.core import make_optimizer
+    params = make_params()
+    grads = make_grads(params)
+    tx = make_optimizer("adapm", 1e-2)
+    s = tx.init(params)
+    u, s = tx.update(grads, s, params)
+    assert s.mu["tok_embed"]["w"].size > 0       # embedding carries momentum
+    assert s.mu["lm_head"]["w"].size > 0         # head carries momentum
+    assert s.mu["layers"]["wq"].size == 0        # hidden stays stateless
+    # hidden-matrix updates are bitwise SCALE's (same stateless colnorm)
+    tx0 = make_optimizer("scale", 1e-2)
+    u0, _ = tx0.update(grads, tx0.init(params), params)
+    np.testing.assert_array_equal(np.asarray(u["layers"]["wq"]),
+                                  np.asarray(u0["layers"]["wq"]))

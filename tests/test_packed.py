@@ -1,0 +1,223 @@
+"""Packed multi-document pretraining (PR 9): format invariants, the
+packed-vs-unpacked parity property, zero cross-document attention, and the
+sharded packed train step.
+
+The core invariant: a packed batch's loss and grads equal the same
+documents laid out one per row. ``data.pipeline.unpack_to_rows`` is
+*offset-preserving* (each document keeps its packed lane positions, all
+other lanes are pad), so on the jnp reference attention path
+(``REPRO_FUSED=off``) the per-token losses are **bitwise** identical —
+every document's tokens hit the same tiles with the same masked lanes in
+both layouts. Aggregates (mean loss, param grads) only agree to tolerance
+because their summation trees differ across layouts.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import repro_fused, tiny_cfg
+from repro.data import make_dataset
+from repro.data.pipeline import unpack_to_rows
+from repro.kernels.xent import ref as xref
+from repro.models import forward, init_params, loss_fn
+
+B, S = 4, 64
+KEYS = ("tokens", "labels", "segment_ids", "positions", "loss_weights")
+
+
+@pytest.fixture(scope="module")
+def packed():
+    cfg = tiny_cfg()
+    ds = make_dataset(cfg, seq_len=S, global_batch=B, seed=3,
+                      pack_documents=True)
+    return cfg, ds.global_batch_at(step=5)
+
+
+# ---- format invariants ----------------------------------------------------
+
+def test_packed_batch_format(packed):
+    cfg, batch = packed
+    assert set(batch) == set(KEYS)
+    for k in KEYS:
+        assert batch[k].shape == (B, S), k
+    segs = np.asarray(batch["segment_ids"])
+    poss = np.asarray(batch["positions"])
+    labs = np.asarray(batch["labels"])
+    toks = np.asarray(batch["tokens"])
+    wts = np.asarray(batch["loss_weights"])
+    assert segs.min() == 0 and segs.max() >= 2  # multiple docs somewhere
+    for b in range(B):
+        row = segs[b]
+        nz = row[row > 0]
+        # docs fill from the left in placement order; pad is the right tail
+        assert (np.diff(nz) >= 0).all() and (np.diff(nz) <= 1).all()
+        assert (row[len(nz):] == 0).all()
+        for s in np.unique(nz):
+            lanes = np.flatnonzero(row == s)
+            # contiguous document, positions restart at 0
+            assert (np.diff(lanes) == 1).all()
+            np.testing.assert_array_equal(poss[b, lanes],
+                                          np.arange(len(lanes)))
+            # labels are next-token WITHIN the document; the last token
+            # (and anything weight-0) predicts nothing
+            np.testing.assert_array_equal(labs[b, lanes[:-1]],
+                                          toks[b, lanes[1:]])
+            assert labs[b, lanes[-1]] == -1
+            np.testing.assert_array_equal(wts[b, lanes[:-1]], 1.0)
+            assert wts[b, lanes[-1]] == 0.0
+        pad = row == 0
+        assert (labs[b, pad] == -1).all() and (wts[b, pad] == 0.0).all()
+
+
+def test_packed_batch_deterministic(packed):
+    cfg, batch = packed
+    ds2 = make_dataset(cfg, seq_len=S, global_batch=B, seed=3,
+                       pack_documents=True)
+    again = ds2.global_batch_at(step=5)
+    for k in KEYS:
+        np.testing.assert_array_equal(np.asarray(batch[k]),
+                                      np.asarray(again[k]))
+    other = ds2.global_batch_at(step=6)
+    assert not np.array_equal(np.asarray(batch["tokens"]),
+                              np.asarray(other["tokens"]))
+
+
+def test_unpack_to_rows_is_offset_preserving(packed):
+    _, batch = packed
+    rows = unpack_to_rows(batch)
+    segs = np.asarray(batch["segment_ids"])
+    n_docs = sum(len(np.unique(segs[b][segs[b] > 0])) for b in range(B))
+    assert rows["tokens"].shape == (n_docs, S)
+    i = 0
+    for b in range(B):
+        for s in np.unique(segs[b]):
+            if s == 0:
+                continue
+            m = segs[b] == s
+            np.testing.assert_array_equal(
+                np.asarray(rows["tokens"][i])[m],
+                np.asarray(batch["tokens"][b])[m])
+            assert (np.asarray(rows["segment_ids"][i])[~m] == 0).all()
+            assert (np.asarray(rows["labels"][i])[~m] == -1).all()
+            i += 1
+
+
+# ---- the parity property --------------------------------------------------
+
+def _per_token_losses(cfg, params, batch):
+    """(B, S) f32 weighted per-token losses on whatever path is active."""
+    h, _, _ = forward(params, cfg, batch["tokens"],
+                      positions=batch["positions"],
+                      segment_ids=batch["segment_ids"])
+    per = xref.losses(h, params["lm_head"]["w"], batch["labels"],
+                      cfg.vocab_size)
+    return per * batch["loss_weights"]
+
+
+def test_packed_vs_unpacked_bitwise_on_reference_path(packed):
+    """Per-token losses are BITWISE equal packed vs unpacked (ref path)."""
+    cfg, batch = packed
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rows = unpack_to_rows(batch)
+    with repro_fused("off"):
+        per_p = np.asarray(_per_token_losses(cfg, params, batch))
+        per_u = np.asarray(_per_token_losses(cfg, params, rows))
+    segs = np.asarray(batch["segment_ids"])
+    i = 0
+    for b in range(B):
+        for s in np.unique(segs[b]):
+            if s == 0:
+                continue
+            m = segs[b] == s
+            np.testing.assert_array_equal(per_p[b][m], per_u[i][m],
+                                          err_msg=f"row {b} doc {s}")
+            i += 1
+
+
+def test_packed_vs_unpacked_loss_and_grads(packed):
+    """Scalar loss and param grads match across layouts (to tolerance:
+    the summation trees differ, so aggregates are not bitwise)."""
+    cfg, batch = packed
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def mean_loss(p, bt):
+        return loss_fn(p, cfg, bt)[0]
+
+    with repro_fused("off"):
+        lp, gp = jax.value_and_grad(mean_loss)(params, batch)
+        lu, gu = jax.value_and_grad(mean_loss)(params,
+                                               unpack_to_rows(batch))
+    np.testing.assert_allclose(float(lp), float(lu), rtol=1e-6)
+    for a, b_ in zip(jax.tree_util.tree_leaves(gp),
+                     jax.tree_util.tree_leaves(gu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_packed_fused_path_matches_reference(packed):
+    """The fused attention/xent route agrees with the jnp reference on a
+    packed batch (interpret oracle on CPU)."""
+    cfg, batch = packed
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with repro_fused("interpret"):
+        lf, _ = loss_fn(params, cfg, batch)
+    with repro_fused("off"):
+        lr, _ = loss_fn(params, cfg, batch)
+    np.testing.assert_allclose(float(lf), float(lr), rtol=1e-5)
+
+
+def test_zero_cross_document_attention(packed):
+    """Perturbing one document leaves every OTHER document's per-token
+    losses bitwise unchanged — the segment mask admits no leakage."""
+    cfg, batch = packed
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    segs = np.asarray(batch["segment_ids"])
+    b = next(b for b in range(B) if segs[b].max() >= 2)
+    mutant = dict(batch)
+    toks = np.asarray(batch["tokens"]).copy()
+    m1 = segs[b] == 1
+    toks[b, m1] = (toks[b, m1] + 7) % cfg.vocab_size
+    mutant["tokens"] = jnp.asarray(toks)
+    with repro_fused("off"):
+        base = np.asarray(_per_token_losses(cfg, params, batch))
+        pert = np.asarray(_per_token_losses(cfg, params, mutant))
+    other = (segs[b] >= 2)
+    np.testing.assert_array_equal(base[b][other], pert[b][other])
+    assert not np.array_equal(base[b][m1], pert[b][m1])  # doc 1 DID change
+    # untouched rows are bitwise untouched
+    rest = [r for r in range(B) if r != b]
+    np.testing.assert_array_equal(base[rest], pert[rest])
+
+
+# ---- sharded packed training ----------------------------------------------
+
+def test_packed_train_cli_under_forced_8_devices():
+    """The --pack-documents driver end-to-end on a forced 8-device mesh:
+    sharded params, shard_map'd fused kernels, packed batches with the
+    extra per-token leaves flowing through the jitted step."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+assert len(jax.devices()) == 8
+from repro.launch.train import main
+loss = main(["--arch", "qwen2-7b", "--smoke", "--steps", "3",
+             "--batch", "8", "--seq", "32", "--pack-documents",
+             "--log-every", "1"])
+assert loss == loss and loss < 20.0, loss
+print("OK")
+"""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FUSED", None)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK" in res.stdout

@@ -384,3 +384,92 @@ print("OK")
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stdout + res.stderr
     assert "OK" in res.stdout
+
+
+# ---- weighted loss (packed-document denominators) -------------------------
+
+def _weighted_ref(h, w, labels, weights, vocab):
+    """Naive weighted mean: sum(w_i * loss_i) / sum of effective weights."""
+    per = np.asarray(xref.losses(h, w, labels, vocab), np.float64)
+    eff = np.asarray(weights, np.float64) * (np.asarray(labels) >= 0)
+    denom = eff.sum()
+    return (per * eff).sum() / (denom if denom > 0 else 1.0), eff.sum()
+
+
+@pytest.mark.parametrize("fused", ["interpret", "off"],
+                         ids=["fused", "chunked"])
+def test_lm_loss_fractional_weight_denominator(fused):
+    """Regression: the mean must divide by the summed effective weight.
+
+    With every weight fractional and the total below 1.0 the old
+    ``max(ws, 1.0)`` clamp silently deflated the loss (divided a 0.3-token
+    batch by 1.0); the fix divides by ws whenever ws > 0.
+    """
+    cfg = tiny_cfg(vocab_size=250, loss_chunk=8)
+    B, S, D = 1, 16, cfg.d_model
+    h, w, labels = _mk(B, S, D, cfg.padded_vocab, 250, seed=11,
+                       mask_frac=False)
+    weights = jnp.zeros((B, S)).at[0, 3].set(0.3)   # total weight 0.3 < 1
+    with repro_fused(fused):
+        loss, wt = lm_loss({"lm_head": {"w": w}}, cfg, h, labels,
+                           weights=weights)
+    ref, ref_w = _weighted_ref(h, w, labels, weights, 250)
+    np.testing.assert_allclose(float(loss), ref, rtol=1e-5)
+    np.testing.assert_allclose(float(wt), ref_w, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fused", ["interpret", "off"],
+                         ids=["fused", "chunked"])
+def test_lm_loss_partial_mask_weights(fused):
+    """Mixed masking — label -1, weight 0, and fractional weights — in one
+    batch: only label>=0 AND weight>0 tokens count, each at its weight."""
+    cfg = tiny_cfg(vocab_size=250, loss_chunk=8)
+    B, S, D = 2, 16, cfg.d_model
+    h, w, labels = _mk(B, S, D, cfg.padded_vocab, 250, seed=12,
+                       mask_frac=False)
+    labels = labels.at[0, :4].set(-1)               # label-masked
+    weights = jnp.ones((B, S))
+    weights = weights.at[1, 8:].set(0.0)            # weight-masked
+    weights = weights.at[0, 10].set(0.25)           # fractional
+    with repro_fused(fused):
+        loss, wt = lm_loss({"lm_head": {"w": w}}, cfg, h, labels,
+                           weights=weights)
+    ref, ref_w = _weighted_ref(h, w, labels, weights, 250)
+    np.testing.assert_allclose(float(loss), ref, rtol=1e-5)
+    np.testing.assert_allclose(float(wt), ref_w, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fused", ["interpret", "off"],
+                         ids=["fused", "chunked"])
+def test_lm_loss_all_masked_weights_zero_loss_finite_grads(fused):
+    """An all-weight-zero batch yields loss 0 / weight 0 — no NaN from a
+    0/0 mean — and the gradient through it is finite (exactly zero)."""
+    cfg = tiny_cfg(vocab_size=250, loss_chunk=8)
+    B, S, D = 2, 16, cfg.d_model
+    h, w, labels = _mk(B, S, D, cfg.padded_vocab, 250, seed=13,
+                       mask_frac=False)
+    weights = jnp.zeros((B, S))
+    with repro_fused(fused):
+        loss, wt = lm_loss({"lm_head": {"w": w}}, cfg, h, labels,
+                           weights=weights)
+        assert float(loss) == 0.0 and float(wt) == 0.0
+        g = jax.grad(lambda hh: lm_loss({"lm_head": {"w": w}}, cfg, hh,
+                                        labels, weights=weights)[0])(h)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_lm_loss_weighted_fused_matches_chunked():
+    """The two routes agree on a weighted batch (same denominator law)."""
+    cfg = tiny_cfg(vocab_size=256, loss_chunk=8)
+    B, S, D = 2, 32, cfg.d_model
+    h, w, labels = _mk(B, S, D, cfg.padded_vocab, 256, seed=14)
+    weights = jax.random.uniform(jax.random.PRNGKey(15), (B, S))
+    weights = jnp.where(weights > 0.2, weights, 0.0)
+    params = {"lm_head": {"w": w}}
+    with repro_fused("interpret"):
+        lf, wf = lm_loss(params, cfg, h, labels, weights=weights)
+    with repro_fused("off"):
+        lc, wc = lm_loss(params, cfg, h, labels, weights=weights)
+    np.testing.assert_allclose(float(lf), float(lc), rtol=1e-5)
+    np.testing.assert_allclose(float(wf), float(wc), rtol=1e-6)
