@@ -1,0 +1,105 @@
+"""Overhead of the in-jit stats collector (`repro.obs.stats`).
+
+The telemetry plane's contract is "always-on at low cadence": the per-
+layer-group statistics must be cheap enough to leave enabled on every
+production run. This harness times the *same* jitted train step three
+ways — stats off, stats at ``every_k`` (the amortized production shape),
+and stats every step (the worst case) — and reports mean step time plus
+the relative overhead of each. The cadenced overhead is the number the CI
+``obs-smoke`` job asserts stays under 10% at the tiny scale.
+
+Timing: mean wall time over the run (not median — with ``every_k`` only
+every k-th step pays the collector, and the median would report an
+off-cadence step, i.e. ~0 by construction), first post-compile step
+excluded. Off-TPU the step runs under compiled XLA (``REPRO_FUSED=off``,
+like every other harness) so the comparison is real math, not the Pallas
+interpreter.
+
+JSON (``--json BENCH_obs.json``): ``{"schema": "obs_overhead/v1", "rows":
+[{variant, every_k, mean_step_us, overhead_pct}, ...]}``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from benchmarks.common import fused_off_unless_tpu
+from repro.core import make_optimizer
+from repro.data import make_dataset
+from repro.models import ModelConfig, init_params
+from repro.obs import StatsPolicy
+from repro.training import init_state, make_train_step
+
+SCHEMA = "obs_overhead/v1"
+
+
+def bench_cfg(tiny: bool) -> ModelConfig:
+    if tiny:
+        return ModelConfig(name="obs-tiny", family="dense", n_layers=2,
+                           d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                           vocab_size=256, dtype="float32",
+                           attn_kv_block=16, attn_q_block=16, loss_chunk=16)
+    return ModelConfig(name="obs-base", family="dense", n_layers=4,
+                       d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                       vocab_size=4096, dtype="float32",
+                       attn_kv_block=64, attn_q_block=64, loss_chunk=64)
+
+
+def _mean_step_us(cfg, ds, stats, steps: int) -> float:
+    tx = make_optimizer("scale", 1e-3)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_state(params, tx)
+    fn = jax.jit(make_train_step(cfg, tx, clip_norm=1.0, stats=stats))
+    # compile + one settle step outside the clock
+    for i in range(2):
+        state, m = fn(state, ds.host_batch_at(i))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(2, 2 + steps):
+        state, m = fn(state, ds.host_batch_at(i))
+    jax.block_until_ready(m["loss"])
+    return 1e6 * (time.perf_counter() - t0) / steps
+
+
+def run(tiny: bool = False, every_k: int = 4, steps: int = 32,
+        json_path=None):
+    cfg = bench_cfg(tiny)
+    batch, seq = (8, 64) if tiny else (8, 256)
+    ds = make_dataset(cfg, seq_len=seq, global_batch=batch, seed=0)
+    with fused_off_unless_tpu():
+        base = _mean_step_us(cfg, ds, None, steps)
+        cadenced = _mean_step_us(cfg, ds, StatsPolicy(every_k=every_k),
+                                 steps)
+        every = _mean_step_us(cfg, ds, StatsPolicy(every_k=1), steps)
+    rows = [
+        {"variant": "no_stats", "every_k": 0, "mean_step_us": base,
+         "overhead_pct": 0.0},
+        {"variant": "stats_cadenced", "every_k": every_k,
+         "mean_step_us": cadenced,
+         "overhead_pct": 100.0 * (cadenced - base) / base},
+        {"variant": "stats_every_step", "every_k": 1, "mean_step_us": every,
+         "overhead_pct": 100.0 * (every - base) / base},
+    ]
+    for r in rows:
+        print(f"{r['variant']},{r['every_k']},{r['mean_step_us']:.1f},"
+              f"{r['overhead_pct']:+.2f}%")
+    doc = {"schema": SCHEMA, "model": cfg.name, "batch": batch, "seq": seq,
+           "steps_timed": steps, "rows": rows}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {json_path}")
+    return doc
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    from benchmarks.common import json_arg
+    run(tiny="--tiny" in argv, json_path=json_arg(argv))
+
+
+if __name__ == "__main__":
+    main()

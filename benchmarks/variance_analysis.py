@@ -14,17 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.labels import layer_group
 from repro.data import make_dataset
 from repro.models import init_params, loss_fn
 from .pretrain_proxy import proxy_cfg
-
-
-def _group_of(path: str) -> str:
-    if "lm_head" in path:
-        return "lm_head"
-    if "tok_embed" in path:
-        return "embedding"
-    return "hidden"
 
 
 def layer_variances(n_small: int = 8, small_batch: int = 4,
@@ -45,7 +38,7 @@ def layer_variances(n_small: int = 8, small_batch: int = 4,
         g = grad_fn(params, sl)
         for (kp, gl), tl in zip(jax.tree_util.tree_flatten_with_path(g)[0],
                                 jax.tree_util.tree_leaves(g_true)):
-            grp = _group_of(path_str(kp))
+            grp = layer_group(path_str(kp))
             d = jnp.mean((gl.astype(jnp.float32) - tl.astype(jnp.float32)) ** 2)
             sums[grp] = sums.get(grp, 0.0) + float(d)
             counts[grp] = counts.get(grp, 0) + 1

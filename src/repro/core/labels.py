@@ -79,6 +79,36 @@ class LabelRules:
         return any(re.search(pat, path) for pat in self.tied_last)
 
 
+# Coarse layer groups for observability (paper Fig. 4 / Fig. 10 axes):
+# the output head vs the token embedding vs everything in between. This is
+# deliberately coarser than the optimizer labels above — the paper's
+# variance/column-norm figures are stated per *layer group*, and both the
+# offline benchmark (benchmarks/variance_analysis.py) and the live in-jit
+# stats collector (repro.obs.stats) must bucket identically.
+LAYER_GROUPS = ("embedding", "hidden", "lm_head")
+
+
+def layer_group(path: str, tied: bool = False) -> str:
+    """Map a parameter tree path to its Fig. 4 layer group.
+
+    ``tied=True`` mirrors :meth:`LabelRules.tied`: with weight tying the
+    token embedding IS the logit-producing matrix, so it reports under
+    ``lm_head`` (where the paper's variance/col-norm claims live) instead
+    of ``embedding``.
+    """
+    for pat in LAST_LAYER_PATTERNS:
+        if re.search(pat, path):
+            return "lm_head"
+    if tied:
+        for pat in TIED_LAST_PATTERNS:
+            if re.search(pat, path):
+                return "lm_head"
+    for pat in FIRST_LAYER_PATTERNS:
+        if re.search(pat, path):
+            return "embedding"
+    return "hidden"
+
+
 def path_str(key_path) -> str:
     parts = []
     for k in key_path:

@@ -426,6 +426,30 @@ def reset_fallbacks() -> None:
     _FALLBACK_LOGGED.clear()
 
 
+def fallback_snapshot() -> dict:
+    """Immutable copy of the cumulative per-op fallback counters.
+
+    Pair with :func:`fallback_delta` for per-interval metric emission:
+    the training driver snapshots at each metrics record and logs the
+    delta since the previous one — cumulative counters stay untouched, so
+    the chaos tests' whole-run assertions (which read
+    :func:`fallback_counts`) never race a metrics-cadence reset.
+    """
+    return dict(_FALLBACK_COUNTS)
+
+
+def fallback_delta(prev: dict, cur: dict | None = None) -> dict:
+    """Per-op fallback increments since ``prev`` (a prior snapshot).
+
+    ``cur`` defaults to a fresh snapshot. Ops with no new degradations are
+    omitted, so an all-healthy interval is ``{}`` (nothing to log).
+    """
+    if cur is None:
+        cur = fallback_snapshot()
+    return {op: n - prev.get(op, 0) for op, n in cur.items()
+            if n - prev.get(op, 0)}
+
+
 def _dispatch_fault_gate(op: str) -> None:
     # chaos hook (REPRO_FAULTS dispatch_fail@op): no-op unless set; the
     # env check keeps the training package off dispatch's import path

@@ -14,14 +14,29 @@ exit, so a preempted run under ``--resume auto`` loses at most the current
 step. ``REPRO_FAULTS`` (see :mod:`repro.training.faults`) injects
 deterministic chaos into all of it.
 
+Telemetry (PR 10, :mod:`repro.obs`): ``--log-dir`` attaches a JSONL
+metrics sink (schema ``repro_metrics/v1``, one ``metrics.<host>.jsonl``
+per process — never cross-host-written) behind a non-blocking background
+logger; records at ``--metrics-every`` cadence carry loss/norm metrics,
+step-time breakdown (data wait / blocked step / checkpoint IO), tokens/s,
+per-device memory where the backend reports it, and kernel-fallback
+*deltas* (``dispatch.fallback_delta``). ``--stats-every K`` weaves the
+in-jit per-layer-group statistics collector into the step (the paper's
+Fig. 4/10 quantities live — see :mod:`repro.obs.stats`); ``--profile-steps
+A:B`` wraps those steps in ``jax.profiler`` traces. Console lines are
+host-0-only and always flushed; the logger is flushed on SIGTERM and on
+rollback so a dying run's tail reaches disk.
+
 Example (end-to-end ~100M-param pretraining driver):
   PYTHONPATH=src python -m repro.launch.train --arch llama-130m \
       --optimizer scale --steps 200 --batch 16 --seq 256 \
-      --ckpt-dir /tmp/ckpt --ckpt-every 50 --resume auto
+      --ckpt-dir /tmp/ckpt --ckpt-every 50 --resume auto \
+      --log-dir /tmp/run0 --stats-every 50
 """
 from __future__ import annotations
 
 import argparse
+import os
 import signal
 import time
 
@@ -35,6 +50,8 @@ from repro.kernels import dispatch
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.models.sharding import Rules
+from repro.obs import (JSONLSink, MetricsLogger, ProfileWindow, StatsPolicy,
+                       StepTimer, device_memory, split_stats, trace_span)
 from repro.training import (GuardPolicy, init_guard_state, init_state,
                             make_train_step, resolve_plan)
 
@@ -99,6 +116,23 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-dir", default="",
+                    help="write schema-versioned JSONL metrics records "
+                         "(metrics.<host>.jsonl) under this directory via "
+                         "the non-blocking background logger")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="JSONL record cadence in steps (needs --log-dir)")
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="cadence of the in-jit per-layer-group gradient "
+                         "statistics (Fig. 4/10 live: grad norms, column-"
+                         "norm dispersion, update/param ratios, momentum "
+                         "norms); 0 disables the collector entirely")
+    ap.add_argument("--profile-steps", default="",
+                    help="'A:B' (inclusive) or 'A': wrap those steps in a "
+                         "jax.profiler trace written to --profile-dir")
+    ap.add_argument("--profile-dir", default="",
+                    help="profiler trace directory (default "
+                         "<log-dir>/profile)")
     ap.add_argument("--no-guard", action="store_true",
                     help="disable the in-jit anomaly guard (finite checks "
                          "on loss/grad norm, step skipping, rollback)")
@@ -125,15 +159,42 @@ def main(argv=None):
         spike_factor=args.spike_factor, spike_warmup=args.spike_warmup,
         max_bad_steps=args.max_bad_steps)
     faults = resolve_plan()  # REPRO_FAULTS, read once, outside jit
+
+    # ---- telemetry plane: every record/line carries (host, step); the
+    # JSONL file is per-host (never cross-host-written) and only host 0
+    # speaks on the console (multi-host log hygiene)
+    host = jax.process_index()
+    sinks = []
+    if args.log_dir:
+        os.makedirs(args.log_dir, exist_ok=True)
+        sinks.append(JSONLSink(
+            os.path.join(args.log_dir, f"metrics.{host}.jsonl")))
+    logger = MetricsLogger(sinks, host=host)
+    profile = ProfileWindow.parse(
+        args.profile_steps,
+        args.profile_dir or os.path.join(args.log_dir or ".", "profile"))
+
     if faults is not None:
-        print(f"fault injection active: {faults}")
+        logger.console(f"fault injection active: {faults}")
 
     cfg, tx = build(args)
     rules = Rules(cfg.rule_overrides)
     n_dev = len(jax.devices())
     mesh = make_host_mesh(data=n_dev)
-    print(f"arch={cfg.name} optimizer={args.optimizer} devices={n_dev} "
-          f"guard={'off' if guard is None else 'on'}")
+    stats = StatsPolicy(every_k=args.stats_every,
+                        tied=cfg.tie_embeddings) \
+        if args.stats_every > 0 else None
+    logger.console(f"arch={cfg.name} optimizer={args.optimizer} "
+                   f"devices={n_dev} "
+                   f"guard={'off' if guard is None else 'on'}"
+                   + (f" stats_every={args.stats_every}" if stats else ""))
+    logger.log("run_header", 0, arch=cfg.name, optimizer=args.optimizer,
+               devices=n_dev, guard=guard is not None,
+               stats_every=args.stats_every, steps=args.steps,
+               batch=args.batch, seq=args.seq, lr=args.lr,
+               grad_accum=args.grad_accum,
+               pack_documents=bool(args.pack_documents),
+               tie_embeddings=bool(cfg.tie_embeddings))
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     if n_dev > 1:
@@ -151,7 +212,8 @@ def main(argv=None):
         got = restore_latest(args.ckpt_dir, state)
         if got is not None:
             state, start_step = got
-            print(f"resumed from step {start_step}")
+            logger.console(f"resumed from step {start_step}",
+                           step=start_step)
 
     ds = make_dataset(cfg, seq_len=args.seq, global_batch=args.batch,
                       seed=args.seed, pack_documents=args.pack_documents)
@@ -160,7 +222,7 @@ def main(argv=None):
         return make_train_step(cfg, tx, grad_accum=args.grad_accum,
                                clip_norm=args.clip_norm, rules=rules,
                                mesh=mesh if n_dev > 1 else None, donate=True,
-                               guard=guard, faults=faults)
+                               guard=guard, faults=faults, stats=stats)
 
     step_fn = make_step(tx)
 
@@ -186,15 +248,54 @@ def main(argv=None):
     step, done_steps = start_step, 0
     lr_scale, rollbacks = 1.0, 0
     metrics = {"loss": float("nan")}
+    timer = StepTimer()
+    fb_prev = dispatch.fallback_snapshot()
+
+    last_emitted = -1
+
+    def emit_record(step, tput):
+        """One train_step JSONL record: loss/norm metrics, on-cadence
+        stats, step-time breakdown deltas, memory, fallback deltas."""
+        nonlocal fb_prev, last_emitted
+        last_emitted = step
+        plain, stat_vals = split_stats(metrics, stats)
+        rec = dict(plain)
+        rec.update(stat_vals)
+        rec.update(timer.snapshot())
+        rec.update(device_memory())
+        fb = dispatch.fallback_snapshot()
+        delta = dispatch.fallback_delta(fb_prev, fb)
+        fb_prev = fb
+        if delta:
+            rec["fallbacks"] = delta
+        rec["tokens_per_s"] = tput
+        rec["lr_scale"] = lr_scale
+        rec["rollbacks"] = rollbacks
+        logger.log("train_step", step, rec)
+
     try:
         while step < args.steps and not stop["sigterm"]:
-            batch = ds.host_batch_at(step)
-            state, metrics = step_fn(state, batch)
-            if guard is not None and float(metrics["rollback"]):
+            if profile is not None:
+                profile.maybe_start(step)
+            with timer.section("data"), trace_span("data_wait"):
+                batch = ds.host_batch_at(step)
+            with timer.section("step"), trace_span("train_step"):
+                state, metrics = step_fn(state, batch)
+            rollback_flag = False
+            if guard is not None:
+                with timer.section("sync"):
+                    rollback_flag = bool(float(metrics["rollback"]))
+            if profile is not None:
+                profile.maybe_stop(step)
+            if rollback_flag:
                 # in-jit code flagged an unrecoverable streak; the host
                 # takes the action jit cannot: restore + LR cut + retrace
                 lr_scale *= args.rollback_lr_cut
                 rollbacks += 1
+                logger.log("event", step, event="rollback",
+                           rollbacks=rollbacks, lr_scale=lr_scale,
+                           skipped=metrics["skipped"])
+                logger.flush()     # the tail of a sick run must hit disk
                 if rollbacks > args.max_rollbacks:
                     raise RuntimeError(
                         f"giving up after {args.max_rollbacks} rollbacks: "
@@ -204,15 +305,17 @@ def main(argv=None):
                     if args.ckpt_dir else None
                 if got is not None:
                     state, step = got
-                    print(f"rollback #{rollbacks}: restored step {step}, "
-                          f"peak lr x{lr_scale:g}", flush=True)
+                    logger.console(f"rollback #{rollbacks}: restored step "
+                                   f"{step}, peak lr x{lr_scale:g}",
+                                   step=step)
                 else:
                     # nothing to roll back to: reset the streak and push on
                     # with the cut LR (the guard keeps skipping bad steps)
                     step += 1
-                    print(f"rollback #{rollbacks}: no checkpoint in "
-                          f"{args.ckpt_dir or '<none>'}; continuing with "
-                          f"peak lr x{lr_scale:g}", flush=True)
+                    logger.console(f"rollback #{rollbacks}: no checkpoint "
+                                   f"in {args.ckpt_dir or '<none>'}; "
+                                   f"continuing with peak lr x{lr_scale:g}",
+                                   step=step)
                 state = state._replace(guard=init_guard_state())
                 _, tx = build(args, lr_scale)
                 step_fn = make_step(tx)
@@ -221,9 +324,8 @@ def main(argv=None):
             done_steps += 1
             eff_tokens += float(metrics.get("weight", tokens_per_step)) \
                 if args.pack_documents else tokens_per_step
+            tput = eff_tokens / max(time.time() - t0, 1e-9)
             if step % args.log_every == 0 or done_steps == 1:
-                dt = time.time() - t0
-                tput = eff_tokens / max(dt, 1e-9)
                 line = (f"step {step:6d} loss {float(metrics['loss']):.4f} "
                         f"|g| {float(metrics['grad_norm']):.3f} "
                         f"tok/s {tput:,.0f}")
@@ -233,21 +335,36 @@ def main(argv=None):
                 fb = dispatch.fallback_counts()
                 if fb:
                     line += f" kernel-fallbacks {sum(fb.values())}"
-                print(line, flush=True)
+                logger.console(line, step=step, raw=True)
+            if args.log_dir and (step % args.metrics_every == 0
+                                 or done_steps == 1):
+                emit_record(step, tput)
             if args.ckpt_dir and step % args.ckpt_every == 0:
-                if pending is not None:
-                    pending.wait()        # one checkpoint in flight at a time
-                pending = save_async(args.ckpt_dir, step, state)
-        if pending is not None:
-            pending.wait()
-        if args.ckpt_dir:
-            save(args.ckpt_dir, step, state)
+                with timer.section("ckpt"), trace_span("checkpoint"):
+                    if pending is not None:
+                        pending.wait()   # one checkpoint in flight at a time
+                    pending = save_async(args.ckpt_dir, step, state)
+        with timer.section("ckpt"), trace_span("checkpoint"):
+            if pending is not None:
+                pending.wait()
+            if args.ckpt_dir:
+                save(args.ckpt_dir, step, state)
         if stop["sigterm"]:
-            print(f"sigterm: checkpointed step {step}, exiting cleanly",
-                  flush=True)
+            logger.console(f"sigterm: checkpointed step {step}, exiting "
+                           "cleanly", step=step)
         else:
-            print(f"done: final loss {float(metrics['loss']):.4f}")
+            logger.console(f"done: final loss {float(metrics['loss']):.4f}",
+                           step=step)
+        if args.log_dir and done_steps and step != last_emitted:
+            emit_record(step, eff_tokens / max(time.time() - t0, 1e-9))
+        logger.log("run_end", step,
+                   reason="sigterm" if stop["sigterm"] else "done",
+                   loss=metrics["loss"], rollbacks=rollbacks,
+                   fallbacks=dispatch.fallback_counts() or None)
     finally:
+        if profile is not None:
+            profile.finalize()
+        logger.close()
         if prev_handler is not None:
             signal.signal(signal.SIGTERM, prev_handler)
     return float(metrics["loss"])

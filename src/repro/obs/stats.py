@@ -1,0 +1,202 @@
+"""In-jit per-layer-group gradient/update/momentum statistics.
+
+The paper's argument is observational: gradient variance concentrates in
+the output layer (Fig. 4) and LM-head gradient column norms follow token
+frequency (Fig. 10) — which is why SCALE puts momentum on the head and
+normalizes column-wise. This module makes those facts *live* training
+metrics instead of an offline benchmark: a :class:`StatsPolicy` handed to
+``make_train_step(stats=...)`` weaves a collector into the jitted step
+that, every ``every_k`` steps, computes per layer group (``embedding`` /
+``hidden`` / ``lm_head`` — the shared :func:`repro.core.labels.layer_group`
+bucketing the offline ``benchmarks/variance_analysis.py`` uses):
+
+  * ``grad_norm``      — group L2 gradient norm (the Fig. 4 proxy: at any
+    healthy step ``lm_head`` dominates ``hidden``);
+  * ``colnorm_max`` / ``colnorm_med`` / ``colnorm_disp`` — max, median and
+    max/median ratio of per-output-column gradient norms over the group's
+    matrices (Fig. 10 live: the head's dispersion is the token-frequency
+    imbalance column-wise normalization fixes; tied heads reduce along
+    their transposed storage axis);
+  * ``update_norm`` / ``param_norm`` / ``update_ratio`` — the applied
+    update and its scale relative to the parameters (post-guard: a
+    guard-skipped step truthfully reports 0);
+  * ``momentum_norm``  — L2 norm of the optimizer's first-moment buffers
+    (``PipeState.mu``; zero-size placeholders of stateless groups are
+    skipped, bf16 storage is read in f32).
+
+Cadence discipline: the collector runs under a traced
+``step % every_k == 0`` predicate via ``lax.cond`` — off the cadence step
+the compute branch is dead (no reductions issued, metrics are zeros and
+``stats/valid`` is 0). It is JH001-clean (no Python branching on traced
+values) and *bitwise-inert by construction*: it only ever reads the step's
+tensors, so a run with stats enabled produces exactly the params/opt_state
+of a run without (pinned by ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.labels import (LAYER_GROUPS, LabelRules, layer_group,
+                               path_str)
+
+_f32 = jnp.float32
+
+
+class StatsPolicy(NamedTuple):
+    """Static stats configuration (Python values, resolved outside jit).
+
+    ``every_k``: collection cadence in steps (every step when 1; must be
+    >= 1). ``tied``: the model ties embeddings — the token embedding IS
+    the LM head, so it reports under ``lm_head`` and its column norms
+    reduce along the transposed (V, D) storage axis. ``momentum``:
+    include first-moment-buffer norms. ``colnorms``: include the Fig. 10
+    column-norm dispersion stats. ``ratios``: include update/param norm
+    ratios. ``prefix``: metric-key prefix (``<prefix>/<group>/<name>``).
+    """
+    every_k: int = 50
+    tied: bool = False
+    momentum: bool = True
+    colnorms: bool = True
+    ratios: bool = True
+    prefix: str = "stats"
+
+
+def _col_sq_norms(g, transposed: bool) -> jnp.ndarray:
+    """Flattened squared per-output-column norms of a >=2-D gradient.
+
+    A matrix stored (d_in, d_out) reduces axis -2 (one norm per output
+    column, the Fig. 10 quantity: for the (D, V) head that is one norm
+    per vocab token). Transposed (tied (V, D)) storage reduces axis -1.
+    Stacked 3-D leaves (scan-over-layers / per-expert) contribute every
+    slice's columns.
+    """
+    gf = g.astype(_f32)
+    axis = -1 if transposed else -2
+    return jnp.sum(gf * gf, axis=axis).reshape(-1)
+
+
+def make_stats_fn(policy: StatsPolicy):
+    """Build ``stats_fn(step, grads, old_params, new_params, opt_state)``.
+
+    Returns a traced function producing a flat ``{key: f32 scalar}`` dict
+    with identical keys every step (jit-stable metrics structure);
+    ``<prefix>/valid`` is 1.0 exactly on cadence steps and every other
+    stat is 0 off-cadence. Groups with no matching parameters report 0.
+    """
+    if policy.every_k < 1:
+        raise ValueError(f"StatsPolicy.every_k must be >= 1, "
+                         f"got {policy.every_k}")
+    rules = LabelRules.tied() if policy.tied else LabelRules()
+
+    names = []
+    for grp in LAYER_GROUPS:
+        names.append(f"{grp}/grad_norm")
+        if policy.colnorms:
+            names += [f"{grp}/colnorm_max", f"{grp}/colnorm_med",
+                      f"{grp}/colnorm_disp"]
+        if policy.ratios:
+            names += [f"{grp}/update_norm", f"{grp}/param_norm",
+                      f"{grp}/update_ratio"]
+        if policy.momentum:
+            names.append(f"{grp}/momentum_norm")
+
+    def stats_fn(step, grads, old_params, new_params, opt_state):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        paths = [path_str(kp) for kp, _ in flat]
+        groups = [layer_group(p, tied=policy.tied) for p in paths]
+        g_leaves = [g for _, g in flat]
+        old_leaves = jax.tree_util.tree_leaves(old_params)
+        new_leaves = jax.tree_util.tree_leaves(new_params)
+        # first-moment buffers: every pipeline optimizer's state mirrors
+        # the param treedef in `mu` (zero-size placeholders where a group
+        # is stateless); non-pipeline transforms simply have no `mu`
+        mu = getattr(opt_state, "mu", None)
+        mu_leaves = None
+        if mu is not None and \
+                jax.tree_util.tree_structure(mu) == treedef:
+            mu_leaves = jax.tree_util.tree_leaves(mu)
+
+        def compute(_):
+            out = {}
+            for grp in LAYER_GROUPS:
+                idx = [i for i, g in enumerate(groups) if g == grp]
+                gsq = sum((jnp.sum(jnp.square(g_leaves[i].astype(_f32)))
+                           for i in idx), jnp.zeros((), _f32))
+                out[f"{grp}/grad_norm"] = jnp.sqrt(gsq)
+                if policy.colnorms:
+                    sq = [_col_sq_norms(
+                              g_leaves[i],
+                              rules.transposed(paths[i], g_leaves[i].ndim))
+                          for i in idx if g_leaves[i].ndim >= 2]
+                    if sq:
+                        cn = jnp.sqrt(jnp.concatenate(sq))
+                        mx, md = jnp.max(cn), jnp.median(cn)
+                    else:
+                        mx = md = jnp.zeros((), _f32)
+                    out[f"{grp}/colnorm_max"] = mx
+                    out[f"{grp}/colnorm_med"] = md
+                    out[f"{grp}/colnorm_disp"] = mx / jnp.maximum(md, 1e-30)
+                if policy.ratios:
+                    usq = sum((jnp.sum(jnp.square(
+                                   new_leaves[i].astype(_f32)
+                                   - old_leaves[i].astype(_f32)))
+                               for i in idx), jnp.zeros((), _f32))
+                    psq = sum((jnp.sum(jnp.square(
+                                   old_leaves[i].astype(_f32)))
+                               for i in idx), jnp.zeros((), _f32))
+                    un, pn = jnp.sqrt(usq), jnp.sqrt(psq)
+                    out[f"{grp}/update_norm"] = un
+                    out[f"{grp}/param_norm"] = pn
+                    out[f"{grp}/update_ratio"] = un / jnp.maximum(pn, 1e-30)
+                if policy.momentum:
+                    if mu_leaves is not None:
+                        msq = sum((jnp.sum(jnp.square(
+                                       mu_leaves[i].astype(_f32)))
+                                   for i in idx if mu_leaves[i].size),
+                                  jnp.zeros((), _f32))
+                    else:
+                        msq = jnp.zeros((), _f32)
+                    out[f"{grp}/momentum_norm"] = jnp.sqrt(msq)
+            return tuple(out[n] for n in names)
+
+        def skip(_):
+            return tuple(jnp.zeros((), _f32) for _ in names)
+
+        hit = (step % policy.every_k) == 0
+        vals = jax.lax.cond(hit, compute, skip, None)
+        out = {f"{policy.prefix}/{n}": v for n, v in zip(names, vals)}
+        out[f"{policy.prefix}/valid"] = hit.astype(_f32)
+        return out
+
+    return stats_fn
+
+
+def stats_keys(policy: StatsPolicy) -> list:
+    """The metric keys a collector built from ``policy`` emits."""
+    dummy = {"x": jnp.zeros((1, 1))}
+    shape = jax.eval_shape(
+        lambda: make_stats_fn(policy)(jnp.zeros((), jnp.int32), dummy,
+                                      dummy, dummy, None))
+    return sorted(shape)
+
+
+def split_stats(metrics: dict, policy: Optional[StatsPolicy]) -> tuple:
+    """Split a step's metrics dict into (plain, stats) by key prefix.
+
+    ``stats`` is {} off the cadence step (``<prefix>/valid`` 0) or when no
+    policy is active — the driver writes stats fields only when they were
+    actually measured, keeping off-cadence JSONL records small.
+    """
+    if policy is None:
+        return dict(metrics), {}
+    pre = policy.prefix + "/"
+    plain = {k: v for k, v in metrics.items() if not k.startswith(pre)}
+    valid = metrics.get(pre + "valid")
+    if valid is None or not float(valid):
+        return plain, {}
+    stats = {k: v for k, v in metrics.items()
+             if k.startswith(pre) and k != pre + "valid"}
+    return plain, stats

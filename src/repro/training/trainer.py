@@ -15,6 +15,7 @@ from jax.sharding import Mesh
 from repro.core.types import GradientTransformation, apply_updates, global_norm
 from repro.models import loss_fn
 from repro.models.sharding import Rules
+from repro.obs.stats import StatsPolicy, make_stats_fn
 from repro.training.resilience import (GuardPolicy, guard_step, guard_verdict,
                                        guarded_select, init_guard_state,
                                        inject_grad_faults)
@@ -45,7 +46,8 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                     mesh: Optional[Mesh] = None,
                     donate: bool = False,
                     guard: Optional[GuardPolicy] = None,
-                    faults=None):
+                    faults=None,
+                    stats: Optional[StatsPolicy] = None):
     """Build ``train_step(state, batch) -> (state, metrics)``.
 
     Batches are passed to the loss whole: packed-document batches
@@ -106,6 +108,14 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     from ``REPRO_FAULTS`` outside jit). Only its gradient faults apply
     here: grads are corrupted with NaN/Inf at the spec'd steps via a
     traced select that is bitwise-inert on every other step.
+
+    ``stats``: a :class:`repro.obs.stats.StatsPolicy`. The step then
+    computes per-layer-group gradient/update/momentum statistics (the
+    paper's Fig. 4/10 quantities — see :mod:`repro.obs.stats`) under a
+    traced ``step % every_k == 0`` ``lax.cond`` and merges them into the
+    metrics dict (``stats/<group>/<name>``, zeros plus ``stats/valid`` 0
+    off the cadence step). The collector only reads — params and optimizer
+    state are bitwise those of a stats-less step.
     """
     rules = rules or Rules(cfg.rule_overrides)
     acc_dt = jnp.float32 if accum_dtype == "float32" else jnp.bfloat16
@@ -133,9 +143,14 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
     if mesh is not None and "mesh" in inspect.signature(loss_fn).parameters:
         loss_kwargs["mesh"] = mesh
 
+    stats_fn = make_stats_fn(stats) if stats is not None else None
+
     def loss_of(params, mb):
-        return loss_fn(params, cfg, mb, aux_coef=aux_coef, rules=rules,
-                       **loss_kwargs)
+        # named scope -> the profiler groups the whole fwd (and, via jad's
+        # transpose naming, the bwd) under one label in trace viewers
+        with jax.named_scope("fwd"):
+            return loss_fn(params, cfg, mb, aux_coef=aux_coef, rules=rules,
+                           **loss_kwargs)
 
     grad_fn = jax.value_and_grad(loss_of, has_aux=True)
 
@@ -182,6 +197,7 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                 "build it with init_state(params, tx, guard=True)")
         loss, metrics, grads = compute_grads(state.params, batch)
         grads = inject_grad_faults(faults, state.step, grads)
+        raw_grads = grads   # pre-clip: what the Fig. 4/10 stats measure
         out_metrics = {"loss": loss}
         step_kwargs = dict(up_kwargs)
         if clip_norm > 0 or norm_metrics or guard is not None:
@@ -195,13 +211,15 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                 step_kwargs["grad_scale"] = scale
             else:
                 grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
-        if fused_apply:
-            params, opt_state = tx.update_params(grads, state.opt_state,
-                                                 state.params, **step_kwargs)
-            updates = None
-        else:
-            updates, opt_state = tx.update(grads, state.opt_state, state.params)
-            params = apply_updates(state.params, updates)
+        with jax.named_scope("optimizer_update"):
+            if fused_apply:
+                params, opt_state = tx.update_params(
+                    grads, state.opt_state, state.params, **step_kwargs)
+                updates = None
+            else:
+                updates, opt_state = tx.update(grads, state.opt_state,
+                                               state.params)
+                params = apply_updates(state.params, updates)
         gstate = state.guard
         ok = None
         if guard is not None:
@@ -210,10 +228,11 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
             # never propagates values from the discarded branch, so a
             # skipped step passes params and optimizer state through
             # bitwise — the exact state a clean run minus this step has
-            ok = guard_verdict(guard, state.guard, loss, gnorm)
-            gstate, rollback = guard_step(guard, state.guard, ok, loss)
-            params = guarded_select(ok, params, state.params)
-            opt_state = guarded_select(ok, opt_state, state.opt_state)
+            with jax.named_scope("guard"):
+                ok = guard_verdict(guard, state.guard, loss, gnorm)
+                gstate, rollback = guard_step(guard, state.guard, ok, loss)
+                params = guarded_select(ok, params, state.params)
+                opt_state = guarded_select(ok, opt_state, state.opt_state)
             out_metrics["skipped"] = gstate.skipped
             out_metrics["bad_step"] = (~ok).astype(jnp.int32)
             out_metrics["rollback"] = rollback
@@ -231,6 +250,18 @@ def make_train_step(cfg, tx: GradientTransformation, grad_accum: int = 1,
                 unorm = global_norm(updates)
                 out_metrics["update_norm"] = (
                     jnp.where(ok, unorm, 0.0) if guard is not None else unorm)
+        if stats_fn is not None:
+            # post-guard tensors: a skipped step truthfully reports a zero
+            # update; the collector is read-only, so params/opt_state are
+            # bitwise those of a stats-less build
+            # cadence keys off the *completed-step* index (state.step + 1),
+            # the same 1-based numbering the console lines, checkpoint
+            # steps and the driver's --metrics-every cadence use — so a
+            # --stats-every multiple of --metrics-every lands stats on
+            # emitted records
+            with jax.named_scope("obs_stats"):
+                out_metrics.update(stats_fn(state.step + 1, raw_grads,
+                                            state.params, params, opt_state))
         out_metrics.update({k: v for k, v in metrics.items() if k != "loss"})
         return TrainState(state.step + 1, params, opt_state,
                           gstate), out_metrics
